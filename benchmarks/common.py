@@ -1,0 +1,50 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+
+
+def engine_cfg(T: int = 16, **kw):
+    # deliberately tight channel capacities: backpressure (spill/replay)
+    # differences between placements/policies must be visible, as in the
+    # paper's finite router buffers.  The local update queue must absorb a
+    # full T2 burst (no-drop invariant), which grows with the grid size.
+    base = dict(f_pop=32, r_pop=32, u_pop=64, max_t2=16,
+                cap_route_range=8, cap_route_update=32,
+                cap_rangeq=512, max_rounds=200_000)
+    base.update(kw)
+    burst = T * base["cap_route_range"] * base["max_t2"] + base["u_pop"]
+    base.setdefault("cap_updq", max(8192, 1 << (burst - 1).bit_length()))
+    return EngineConfig(**base)
+
+
+def rmat_graph(scale: int, ef: int = 10, seed: int = 0) -> CSRGraph:
+    n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=seed)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+def pick_root(g: CSRGraph) -> int:
+    return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """(result, best seconds).  First call includes compile; we time the
+    post-compile repeats when repeat > 1."""
+    result = fn(*args, **kw)
+    best = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return result, (best if best is not None else 0.0)
+
+
+def stats_row(stats) -> dict:
+    return {k: int(getattr(stats, k)) for k in stats._fields}

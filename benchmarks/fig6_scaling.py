@@ -1,0 +1,33 @@
+"""Paper Fig. 6: strong scaling of BFS over grid sizes.
+
+The paper's claim: near-linear scaling until ~1k vertices/tile, where tiles
+starve for work.  Our time proxy is rounds x per-round critical path; with
+fixed per-round budgets, rounds should drop ~linearly with T until the
+starvation knee.
+"""
+from __future__ import annotations
+
+from repro.core import algorithms as alg
+from benchmarks.common import engine_cfg, pick_root, rmat_graph, stats_row
+
+
+def run(scale: int = 12, tiles=(4, 8, 16, 32, 64)) -> list[dict]:
+    g = rmat_graph(scale)
+    root = pick_root(g)
+    rows = []
+    base_rounds = None
+    for T in tiles:
+        pg = alg.prepare(g, T)
+        res = alg.bfs(pg, root, engine_cfg(T=T))
+        s = stats_row(res.stats)
+        if base_rounds is None:
+            base_rounds = s["rounds"] * tiles[0]
+        rows.append({
+            "bench": "fig6", "T": T,
+            "vertices_per_tile": g.num_vertices // T,
+            "rounds": s["rounds"],
+            "speedup_vs_linear": round(
+                base_rounds / (s["rounds"] * T), 3),
+            "edges": s["edges_scanned"],
+        })
+    return rows

@@ -1,0 +1,87 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+table — single-pod, per the spec; pod2 rows prove the multi-pod compile."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load_cells(art_dir: str = ART) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(art_dir: str = ART, tag: str = "") -> list[dict]:
+    rows = []
+    for c in load_cells(art_dir):
+        if c["mesh"] != "pod1" or c.get("tag", "") != tag:
+            continue
+        if c["status"] == "skipped":
+            rows.append({"bench": "roofline", "arch": c["arch"],
+                         "shape": c["shape"], "status": "skipped",
+                         "reason": c["reason"][:40]})
+            continue
+        if c["status"] != "ok":
+            rows.append({"bench": "roofline", "arch": c["arch"],
+                         "shape": c["shape"], "status": "ERROR"})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": c["arch"], "shape": c["shape"],
+            "status": "ok",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"].replace("_s", ""),
+            "useful_flops": round(r.get("useful_flop_fraction", 0), 3),
+            "roofline_frac": round(r["roofline_fraction"], 4),
+        })
+    return rows
+
+
+def multipod_summary(art_dir: str = ART, tag: str = "") -> list[dict]:
+    rows = []
+    for c in load_cells(art_dir):
+        if c["mesh"] != "pod2" or c.get("tag", "") != tag:
+            continue
+        rows.append({
+            "bench": "dryrun-pod2", "arch": c["arch"], "shape": c["shape"],
+            "status": c["status"],
+            "compile_s": c.get("compile_s"),
+            "temp_gb": round((c.get("memory_analysis", {})
+                              .get("temp_size_in_bytes") or 0) / 2**30, 2)
+            if c["status"] == "ok" else None,
+        })
+    return rows
+
+
+def before_after(art_dir: str = ART) -> list[dict]:
+    """§Perf: paper-faithful baseline vs beyond-paper optimized, per cell."""
+    base = {(c["arch"], c["shape"]): c for c in load_cells(art_dir)
+            if c["mesh"] == "pod1" and c.get("tag", "") == ""
+            and c["status"] == "ok"}
+    opt = {(c["arch"], c["shape"]): c for c in load_cells(art_dir)
+           if c["mesh"] == "pod1" and c.get("tag", "") == "opt"
+           and c["status"] == "ok"}
+    rows = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key]["roofline"], opt[key]["roofline"]
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ob = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        rows.append({
+            "bench": "before_after", "arch": key[0], "shape": key[1],
+            "rf_base": round(b["roofline_fraction"], 4),
+            "rf_opt": round(o["roofline_fraction"], 4),
+            "bound_speedup": round(bb / max(ob, 1e-12), 2),
+            "dom_base": b["dominant"].replace("_s", ""),
+            "dom_opt": o["dominant"].replace("_s", ""),
+        })
+    return rows

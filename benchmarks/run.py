@@ -1,0 +1,51 @@
+"""Benchmark runner: one section per paper table/figure + the roofline
+aggregation.  Prints CSV-ish rows (name, key metrics, derived)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+    fast = "--fast" in sys.argv
+
+    from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
+                            fig8_noc, lm_micro, roofline, work_efficiency)
+
+    print("# fig5: optimization-ladder ablation (paper Fig. 5)")
+    _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
+                            apps=("bfs",) if fast else fig5_ablation.APPS))
+    print("# fig6: strong scaling (paper Fig. 6)")
+    _emit(fig6_scaling.run(scale=10 if fast else 12,
+                           tiles=(4, 16) if fast else (4, 8, 16, 32, 64)))
+    print("# fig7: throughput vs tiles (paper Fig. 7)")
+    _emit(fig7_throughput.run(scale=10 if fast else 12,
+                              tiles=(4, 16) if fast else (4, 8, 16, 32, 64),
+                              apps=("bfs",) if fast else ("bfs", "sssp")))
+    print("# fig8: placement / NoC balance (paper Fig. 8-9)")
+    _emit(fig8_noc.run(scale=8 if fast else 10, T=8 if fast else 16))
+    print("# work-efficiency (paper Section V discussion)")
+    _emit(work_efficiency.run(scale=8 if fast else 10, T=8 if fast else 16))
+    print("# lm-micro: LM substrate microbenches")
+    _emit(lm_micro.run())
+    print("# roofline: dry-run derived, paper-faithful BASELINE (pod1)")
+    _emit(roofline.run(tag=""))
+    print("# roofline: dry-run derived, beyond-paper OPTIMIZED (pod1)")
+    _emit(roofline.run(tag="opt"))
+    print("# perf: baseline vs optimized per cell")
+    _emit(roofline.before_after())
+    print("# dry-run multi-pod compile proof (baseline)")
+    _emit(roofline.multipod_summary(tag=""))
+    print("# dry-run multi-pod compile proof (optimized)")
+    _emit(roofline.multipod_summary(tag="opt"))
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

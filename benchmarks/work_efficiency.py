@@ -1,0 +1,26 @@
+"""Paper's work-efficiency discussion: edges explored vs the sequential
+minimum, async (barrierless, may relax stale values) vs BSP."""
+from __future__ import annotations
+
+from repro.core import algorithms as alg
+from benchmarks.common import engine_cfg, pick_root, rmat_graph, stats_row
+
+
+def run(scale: int = 10, T: int = 16) -> list[dict]:
+    g = rmat_graph(scale)
+    root = pick_root(g)
+    pg = alg.prepare(g, T)
+    rows = []
+    for app in ("bfs", "sssp"):
+        fn = alg.bfs if app == "bfs" else alg.sssp
+        for mode in ("async", "bsp"):
+            res = fn(pg, root, engine_cfg(mode=mode))
+            s = stats_row(res.stats)
+            rows.append({
+                "bench": "work_eff", "app": app, "mode": mode,
+                "edges_scanned": s["edges_scanned"],
+                "edges_per_graph_edge": round(
+                    s["edges_scanned"] / g.num_edges, 3),
+                "rounds": s["rounds"],
+            })
+    return rows

@@ -1,0 +1,58 @@
+"""Batched serving: prefill a batch of prompts into the ring KV cache, then
+greedy-decode continuations — the serve-side end-to-end driver.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b \\
+      --batch 4 --prompt-len 32 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    total = P + G
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+
+    cache = tfm.init_cache(cfg, B, tfm.cache_slots(cfg, total))
+    t0 = time.perf_counter()
+    _, cache = tfm.prefill(params, cfg, cache, {"tokens": prompts})
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {B}x{P} tokens in {t_prefill*1e3:.0f} ms "
+          f"({B*P/t_prefill:.0f} tok/s), cache pos={int(cache.pos)}")
+
+    step = jax.jit(lambda p, c, t: tfm.serve_step(p, cfg, c, t))
+    tok = prompts[:, -1:]
+    out = []
+    t0 = time.perf_counter()
+    for _ in range(G):
+        nxt, cache = step(params, cache, tok)
+        tok = nxt[:, None]
+        out.append(nxt)
+    jax.block_until_ready(tok)
+    t_gen = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decode: {B}x{G} tokens in {t_gen*1e3:.0f} ms "
+          f"({B*G/t_gen:.0f} tok/s)")
+    print("sample continuation ids:", gen[0, :16].tolist())
+    assert bool((gen >= 0).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

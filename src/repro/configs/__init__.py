@@ -1,0 +1,2 @@
+from repro.configs.base import (ALL_SHAPES, SHAPES, ModelConfig, ShapeConfig,
+                                get_config, list_archs, shape_applicable)

@@ -1,0 +1,5 @@
+"""Import all architecture configs so they self-register."""
+from repro.configs import (granite_34b, granite_3_2b, internlm2_20b,  # noqa
+                           internvl2_76b, mixtral_8x22b,
+                           moonshot_v1_16b_a3b, musicgen_large, nemotron_4_15b,
+                           rwkv6_1_6b, zamba2_2_7b)

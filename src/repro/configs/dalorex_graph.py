@@ -1,0 +1,33 @@
+"""The paper's own workload presets: graph/sparse datasets x tile grids.
+
+These drive examples/graph_analytics.py and the fig5-8 benchmarks; the
+RMAT scales mirror the paper's synthetic datasets (Section IV-A), clipped
+to container-feasible sizes (the paper's RMAT-22/26 need tens of GB).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphWorkload:
+    name: str
+    scale: int            # RMAT scale (V = 2^scale)
+    edge_factor: int = 10
+    tiles: int = 16       # emulated Dalorex grid size
+    apps: tuple = ("bfs", "sssp", "pagerank", "wcc", "spmv")
+
+
+PRESETS = {
+    # laptop-scale stand-ins for the paper's datasets
+    "rmat-small": GraphWorkload("rmat-small", scale=10),
+    "rmat-medium": GraphWorkload("rmat-medium", scale=14),
+    "rmat-large": GraphWorkload("rmat-large", scale=16, tiles=64),
+    # amazon-like: V=262k, E~1.2M -> scale 18 ef 5 approximates the shape
+    "amazon-like": GraphWorkload("amazon-like", scale=18, edge_factor=5,
+                                 tiles=64),
+}
+
+
+def get_workload(name: str) -> GraphWorkload:
+    return PRESETS[name]

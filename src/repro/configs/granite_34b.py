@@ -1,0 +1,14 @@
+"""granite-34b [dense] — llama-arch code model, MQA (kv=1).
+
+88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152 [arXiv:2405.04324].
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("granite-34b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b", family="dense",
+        num_layers=88, d_model=6144, num_heads=48, num_kv_heads=1,
+        d_ff=24576, vocab_size=49152, mlp="swiglu",
+    )

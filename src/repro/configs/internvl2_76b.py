@@ -1,0 +1,17 @@
+"""internvl2-76b [vlm] — InternViT frontend (stub) + InternLM2-76B backbone.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 [arXiv:2404.16821].
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings which are prepended to the token stream.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("internvl2-76b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b", family="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=28672, vocab_size=128256, mlp="swiglu",
+        rope_theta=1e6, frontend="vision", num_patches=256,
+    )

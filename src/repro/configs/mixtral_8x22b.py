@@ -1,0 +1,17 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, GQA kv=8, sliding-window attn.
+
+56L d_model=6144 48H (GQA kv=8) expert d_ff=16384 vocab=32768
+[arXiv:2401.04088].  SWA gives a bounded decode cache, so this MoE runs the
+long_500k shape too.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("mixtral-8x22b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe",
+        num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=16384, vocab_size=32768, mlp="swiglu",
+        num_experts=8, experts_per_tok=2, sliding_window=4096,
+    )

@@ -1,0 +1,18 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight: 64 experts top-6, tiny d_ff.
+
+48L d_model=2048 16H (kv=16 = MHA) expert d_ff=1408 vocab=163840
+[hf:moonshotai/Moonlight-16B-A3B].  The most routing-intensive cell: 6-way
+dispatch over 64 experts each layer — the Dalorex showcase.  Layer 0 is
+dense (as in Moonlight).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("moonshot-v1-16b-a3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b", family="moe",
+        num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, vocab_size=163840, mlp="swiglu",
+        num_experts=64, experts_per_tok=6, first_dense_layers=1,
+    )

@@ -1,0 +1,19 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (kv=32 = MHA) d_ff=8192 vocab=2048 [arXiv:2306.05284].
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings.  vocab=2048 is too small for routed embedding
+to pay off (a2a setup cost > replicated-table gather) — the config runs
+WITHOUT the Dalorex technique (see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("musicgen-large")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", family="audio",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=2048, mlp="gelu",
+        frontend="audio", routed_embedding=False,
+    )

@@ -1,0 +1,16 @@
+"""rwkv6-1.6b [ssm] — Finch: attention-free, data-dependent decay.
+
+24L d_model=2048 d_ff=7168 vocab=65536 [arXiv:2404.05892].
+O(1) per-token state -> runs the long_500k decode shape.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("rwkv6-1.6b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", family="ssm",
+        num_layers=24, d_model=2048, num_heads=0, num_kv_heads=0,
+        d_ff=7168, vocab_size=65536, mlp="rwkv_channel_mix",
+        rwkv_head_dim=64,
+    )

@@ -1,0 +1,224 @@
+"""Host drivers for the five paper workloads on the Dalorex engine.
+
+Each driver: (1) initializes per-shard value/frontier state in *placed*
+space, (2) runs the engine (barrierless or BSP) over a comm backend, and
+(3) maps results back to original vertex IDs.
+
+Two execution paths share all engine code:
+
+* ``comm=LocalComm(T)`` — T emulated tiles on one device (tests/benchmarks).
+* ``comm=AxisComm(axis, T)`` via :func:`spmd_engine_call` — real shard_map
+  SPMD over a device mesh (the production / dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import AxisComm, LocalComm
+from repro.core.engine import (BFS, PAGERANK, SPMV, SSSP, WCC, AlgSpec,
+                               EngineConfig, EngineState, GraphShard, INF,
+                               Stats, init_state, run_engine)
+from repro.core.graph import CSRGraph, PartitionedGraph, partition_graph
+
+
+# --------------------------------------------------------------------------
+# State initialization in placed space.
+# --------------------------------------------------------------------------
+
+def real_mask(pg: PartitionedGraph) -> np.ndarray:
+    """(T, v_chunk) bool — slots that hold a real (non-padding) vertex."""
+    return (pg.inv >= 0).reshape(pg.T, pg.v_chunk)
+
+
+def init_min_state(pg: PartitionedGraph, roots: list[int]):
+    """value=+inf except roots (=0); frontier = roots."""
+    value = np.full((pg.T, pg.v_chunk), np.float32(np.finfo(np.float32).max))
+    frontier = np.zeros((pg.T, pg.v_chunk), bool)
+    for r in roots:
+        p = int(pg.place[r])
+        t, l = p // pg.v_chunk, p % pg.v_chunk
+        value[t, l] = 0.0
+        frontier[t, l] = True
+    return jnp.asarray(value), jnp.asarray(frontier)
+
+
+def init_wcc_state(pg: PartitionedGraph):
+    """Label = original vertex id; every real vertex starts in the frontier."""
+    inv = pg.inv.reshape(pg.T, pg.v_chunk)
+    value = np.where(inv >= 0, inv, np.float32(np.finfo(np.float32).max))
+    frontier = inv >= 0
+    return jnp.asarray(value, jnp.float32), jnp.asarray(frontier)
+
+
+def init_add_state(pg: PartitionedGraph, x: np.ndarray):
+    """value = x scattered to placed slots; frontier = real vertices with
+    out-edges (vertices with deg 0 emit nothing)."""
+    flat = np.zeros(pg.T * pg.v_chunk, np.float32)
+    flat[pg.place] = x.astype(np.float32)
+    value = flat.reshape(pg.T, pg.v_chunk)
+    deg = np.asarray(pg.deg)
+    frontier = real_mask(pg) & (deg > 0)
+    return jnp.asarray(value), jnp.asarray(frontier)
+
+
+def to_original(pg: PartitionedGraph, arr) -> np.ndarray:
+    """(T, v_chunk) placed-space array -> (V,) original order."""
+    flat = np.asarray(arr).reshape(-1)
+    return flat[pg.place]
+
+
+# --------------------------------------------------------------------------
+# Engine invocation: local emulation and SPMD shard_map.
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("alg", "cfg", "T", "e_chunk", "v_chunk"))
+def _local_call(alg: AlgSpec, cfg: EngineConfig, T: int, e_chunk: int,
+                v_chunk: int, shard: GraphShard, value, frontier):
+    comm = LocalComm(T)
+    st = init_state(comm, cfg, v_chunk, value, frontier)
+    st, stats = run_engine(comm, cfg, alg, shard, st, e_chunk, v_chunk)
+    return st.value, st.acc, stats
+
+
+def local_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
+                      value, frontier):
+    shard = GraphShard(pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val)
+    return _local_call(alg, cfg, pg.T, pg.e_chunk, pg.v_chunk, shard,
+                       value, frontier)
+
+
+def spmd_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
+                     value, frontier, mesh, axis: str = "x"):
+    """Run the engine as true SPMD under shard_map over ``axis`` of ``mesh``.
+
+    Arrays keep the (T, chunk) layout; the leading axis is sharded so each
+    device owns one tile row.  Inside, blocks are squeezed to per-device
+    shards and the identical engine code runs with ``AxisComm``.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    T = pg.T
+    comm = AxisComm(axis, T)
+    spec2 = P(axis, None)
+
+    def body(ptr_start, deg, edge_dst, edge_val, value, frontier):
+        shard = GraphShard(ptr_start[0], deg[0], edge_dst[0], edge_val[0])
+        st = init_state(comm, cfg, pg.v_chunk, value[0], frontier[0])
+        st, stats = run_engine(comm, cfg, alg, shard, st,
+                               pg.e_chunk, pg.v_chunk)
+        return st.value[None], st.acc[None], stats
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec2,) * 6,
+        out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero())),
+        check_vma=False)
+    args = [jax.device_put(a, NamedSharding(mesh, spec2)) for a in
+            (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val, value, frontier)]
+    return jax.jit(fn)(*args)
+
+
+# --------------------------------------------------------------------------
+# Workload drivers.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Result:
+    values: np.ndarray  # (V,) in original vertex order
+    stats: Stats
+    epochs: int = 1
+
+
+def _call(pg, alg, cfg, value, frontier, mesh=None, axis="x"):
+    if mesh is None:
+        return local_engine_call(pg, alg, cfg, value, frontier)
+    return spmd_engine_call(pg, alg, cfg, value, frontier, mesh, axis)
+
+
+def bfs(pg: PartitionedGraph, root: int, cfg: EngineConfig = EngineConfig(),
+        mesh=None) -> Result:
+    value, frontier = init_min_state(pg, [root])
+    v, _, stats = _call(pg, BFS, cfg, value, frontier, mesh)
+    out = to_original(pg, v).astype(np.float64)
+    out[out >= np.float32(np.finfo(np.float32).max)] = np.inf
+    return Result(out, stats)
+
+
+def sssp(pg: PartitionedGraph, root: int, cfg: EngineConfig = EngineConfig(),
+         mesh=None) -> Result:
+    value, frontier = init_min_state(pg, [root])
+    v, _, stats = _call(pg, SSSP, cfg, value, frontier, mesh)
+    out = to_original(pg, v).astype(np.float64)
+    out[out >= np.float32(np.finfo(np.float32).max)] = np.inf
+    return Result(out, stats)
+
+
+def wcc(pg: PartitionedGraph, cfg: EngineConfig = EngineConfig(),
+        mesh=None) -> Result:
+    """Label propagation to the min original id (graph must be symmetric)."""
+    value, frontier = init_wcc_state(pg)
+    v, _, stats = _call(pg, WCC, cfg, value, frontier, mesh)
+    return Result(to_original(pg, v).astype(np.int64), stats)
+
+
+def spmv(pg: PartitionedGraph, x: np.ndarray,
+         cfg: EngineConfig = EngineConfig(), mesh=None) -> Result:
+    """Push-mode y[dst] += val * x[src] — one engine epoch."""
+    value, frontier = init_add_state(pg, x)
+    _, acc, stats = _call(pg, SPMV, cfg, value, frontier, mesh)
+    return Result(to_original(pg, acc).astype(np.float64), stats)
+
+
+def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
+             tol: float = 0.0, cfg: EngineConfig = EngineConfig(),
+             mesh=None) -> Result:
+    """Epoch-synchronized PageRank (the paper keeps the barrier for PR).
+
+    Each epoch is one engine run (push contributions, accumulate); the rank
+    update + dangling redistribution happen between epochs — the host-driven
+    barrier the paper describes reusing the chip-idle signal for.
+    """
+    V = pg.num_vertices
+    real = real_mask(pg)
+    deg = np.asarray(pg.deg)
+    rank = np.where(real, np.float32(1.0 / V), 0.0).astype(np.float32)
+    total = Stats.zero()
+    epochs = 0
+    for _ in range(iters):
+        frontier = jnp.asarray(real & (deg > 0))
+        _, acc, stats = _call(pg, PAGERANK, cfg, jnp.asarray(rank), frontier,
+                              mesh)
+        acc = np.asarray(acc)
+        dangling = rank[real & (deg == 0)].sum()
+        new_rank = np.where(
+            real, (1 - damping) / V + damping * (acc + dangling / V),
+            0.0).astype(np.float32)
+        diff = np.abs(new_rank - rank).sum()
+        rank = new_rank
+        total = jax.tree.map(lambda a, b: a + b, total, stats)
+        epochs += 1
+        if tol and diff < tol:
+            break
+    return Result(to_original(pg, rank).astype(np.float64), total, epochs)
+
+
+# --------------------------------------------------------------------------
+# Convenience: build + partition + symmetrize.
+# --------------------------------------------------------------------------
+
+def symmetrize(g: CSRGraph) -> CSRGraph:
+    src = np.repeat(np.arange(g.num_vertices), g.ptr[1:] - g.ptr[:-1])
+    s2 = np.concatenate([src, g.dst])
+    d2 = np.concatenate([g.dst, src])
+    v2 = np.concatenate([g.val, g.val])
+    return CSRGraph.from_edges(g.num_vertices, s2, d2, v2, dedup=True)
+
+
+def prepare(g: CSRGraph, T: int, scheme: str = "low_order",
+            edge_mode: str = "equal_edges") -> PartitionedGraph:
+    return partition_graph(g, T, scheme, edge_mode)

@@ -1,0 +1,76 @@
+"""Data distribution: the paper's equal-chunk placement arithmetic.
+
+Dalorex distributes every dataset array in equal chunks across tiles and
+routes task messages by the *global array index* alone (headerless NoC,
+Section III-E): ``owner(i) = i // chunk`` and ``local(i) = i % chunk`` once
+the placement permutation has been applied.
+
+Two placement schemes are provided (the Fig. 5 ``Uniform-distr`` ablation):
+
+* ``low_order``  — Dalorex: original element ``v`` goes to shard ``v % T``
+  (scatter by low-order bits). Consecutive hot vertices land on different
+  tiles, balancing work and traffic without preprocessing.
+* ``high_order`` — Tesseract-like: contiguous chunks (``v // chunk``), which
+  concentrates hub neighborhoods (and therefore traffic) on few tiles.
+
+We realize a scheme as a *permutation into placed-ID space* followed by
+contiguous chunking, which is exactly how the paper builds its global CSR
+("we build the global CSR so that consecutive vertices fall into different
+tiles").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def padded_len(n: int, shards: int) -> int:
+    return ((n + shards - 1) // shards) * shards
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSpec:
+    """Equal-chunk distribution of a (padded) global array over shards."""
+
+    total: int  # padded global length; multiple of num_shards
+    num_shards: int
+
+    def __post_init__(self):
+        assert self.total % self.num_shards == 0, (self.total, self.num_shards)
+
+    @property
+    def chunk(self) -> int:
+        return self.total // self.num_shards
+
+    def owner(self, idx):
+        return idx // self.chunk
+
+    def local(self, idx):
+        return idx % self.chunk
+
+    def global_(self, shard, local):
+        return shard * self.chunk + local
+
+
+def placement(n_orig: int, num_shards: int, scheme: str) -> tuple[np.ndarray, np.ndarray]:
+    """Return (place, inv) arrays over the padded ID space.
+
+    ``place[v]`` is the placed ID of original element ``v``;
+    ``inv[p]`` is the original ID at placed slot ``p`` (or -1 for padding).
+    """
+    n_pad = padded_len(n_orig, num_shards)
+    ids = np.arange(n_pad, dtype=np.int64)
+    if scheme == "low_order":
+        chunk = n_pad // num_shards
+        place = (ids % num_shards) * chunk + ids // num_shards
+    elif scheme == "high_order":
+        place = ids.copy()
+    else:
+        raise ValueError(f"unknown placement scheme: {scheme}")
+    inv = np.full(n_pad, -1, dtype=np.int64)
+    inv[place] = ids
+    # mark padding slots
+    pad_mask = inv >= n_orig
+    inv[pad_mask] = -1
+    return place[:n_orig].astype(np.int64), inv

@@ -1,0 +1,435 @@
+"""The Dalorex execution engine: data-local task-flow over a device grid.
+
+One engine runs all five paper workloads (BFS, SSSP, PageRank, WCC, SpMV).
+Per *round* (the vectorized analogue of a window of machine cycles), every
+device executes the paper's task pipeline on its own shard:
+
+  T4/T1  pop local frontier bits  -> edge-range tasks into the range queue
+  T1b    pop range queue          -> bounded range *messages* (split at chunk
+                                     borders and at MAX_T2, Listing 1)
+         --- route by owner(edge_index), one all_to_all ---
+  T2     scan local edges         -> update messages (neighbor, value)
+         --- route by owner(vertex_index), one all_to_all ---
+  T3     fold updates into local shard (scatter-min / scatter-add;
+         atomic-free because this device is the only owner), set local
+         frontier bits for improved vertices.
+
+Backpressure: routing capacity is finite; overflow *spills* back into the
+local queues and is replayed next round — the software form of the paper's
+"CQ full -> early exit, resume next invocation".  Nothing is ever dropped;
+tests assert the ``drops == 0`` invariant.
+
+Scheduling: per-round budgets are chosen per device from queue occupancies —
+the Task Scheduling Unit's traffic-aware priorities (Section III-E), adapted
+from per-cycle arbitration to per-round budget allocation:
+
+  * drain the update queue first (its IQ filling up is the main source of
+    end-point contention),
+  * throttle range-message production while the update path is congested
+    (keep consumer IQs from overflowing),
+  * stop popping the frontier while the range queue is backed up (keep OQs
+    non-empty but bounded).
+
+``policy="static"`` reproduces the paper's round-robin/static arbitration
+rung of the Fig. 5 ablation.
+
+Synchronization: ``mode="async"`` is barrierless Dalorex — improved vertices
+re-enter the *live* frontier immediately.  ``mode="bsp"`` defers them to a
+next-epoch frontier that is swapped in only when the whole grid is quiescent
+(the paper's per-epoch global barrier, driven by the same idle signal).
+
+Termination is the paper's hierarchical idle wire: a psum of local pending
+work (queue occupancy + frontier population); the loop exits when it hits
+zero.  The whole traversal runs inside ONE ``lax.while_loop`` — on real
+meshes there is no host round-trip per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import AxisComm, LocalComm
+from repro.core.graph import PartitionedGraph
+from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
+                               queue_take_front)
+from repro.core.routing import route_tasks
+
+
+# --------------------------------------------------------------------------
+# Algorithm specifications: the paper's T1/T2/T3 payload semantics.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AlgSpec:
+    """How values flow through the task pipeline.
+
+    ``emit``   — T2's payload: f(parent_value, edge_value) for a neighbor.
+    ``kind``   — T3's fold: "min" (relaxation; improvements re-enter the
+                 frontier) or "add" (accumulation into ``acc``; single epoch).
+    ``parent`` — what T1 loads from the local shard for a frontier vertex.
+    """
+
+    name: str
+    kind: str  # "min" | "add"
+    emit: str  # "plus1" | "plus_w" | "copy" | "times_w"
+    parent: str = "value"  # "value" | "value_over_deg"
+
+
+BFS = AlgSpec("bfs", "min", "plus1")
+SSSP = AlgSpec("sssp", "min", "plus_w")
+WCC = AlgSpec("wcc", "min", "copy")
+PAGERANK = AlgSpec("pagerank", "add", "copy", parent="value_over_deg")
+SPMV = AlgSpec("spmv", "add", "times_w")
+
+INF = jnp.float32(np.finfo(np.float32).max)
+
+
+def _emit(alg: AlgSpec, parent: jax.Array, w: jax.Array) -> jax.Array:
+    if alg.emit == "plus1":
+        return parent + 1.0
+    if alg.emit == "plus_w":
+        return parent + w
+    if alg.emit == "copy":
+        return parent
+    if alg.emit == "times_w":
+        return parent * w
+    raise ValueError(alg.emit)
+
+
+# --------------------------------------------------------------------------
+# Engine configuration and state.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static knobs.  Sizes are per device; all shapes they imply are static.
+
+    The queue/budget names mirror the paper:  ``cap_route_*`` are the channel
+    queue (CQ) capacities *per destination*, ``max_t2`` is Listing 1's MAX_T2
+    (edge-scan length bound per message), the ``*_pop`` budgets are the TSU's
+    per-invocation drain amounts.
+    """
+
+    f_pop: int = 32          # frontier bits popped per round (T4 drain)
+    r_pop: int = 32          # range-queue entries popped per round (T1 drain)
+    u_pop: int = 64          # spilled updates replayed per round
+    max_t2: int = 32         # edge-scan bound per range message (MAX_T2)
+    cap_route_range: int = 16    # CQ1: range-message slots per destination
+    cap_route_update: int = 64   # CQ2: update-message slots per destination
+    cap_rangeq: int = 256    # local range-queue capacity (IQ1)
+    cap_updq: int = 16384    # local spilled-update queue capacity
+    policy: str = "traffic"  # "traffic" | "static"
+    mode: str = "async"      # "async" (barrierless) | "bsp"
+    max_rounds: int = 100_000
+
+    def validate(self, T: int):
+        # T2 output volume bound per round; updq must absorb a full burst so
+        # the no-drop invariant holds even under static scheduling.
+        burst = T * self.cap_route_range * self.max_t2 + self.u_pop
+        assert self.cap_updq >= burst, (
+            f"cap_updq={self.cap_updq} < worst-case T2 burst {burst}")
+        assert self.cap_rangeq >= 2 * self.f_pop, "range queue too small"
+
+
+class EngineState(NamedTuple):
+    value: jax.Array      # (v_chunk,) f32 — dist / label / rank / x
+    acc: jax.Array        # (v_chunk,) f32 — "add" accumulator (y / rank acc)
+    frontier: jax.Array   # (v_chunk,) bool — local bitmap frontier (live)
+    next_frontier: jax.Array  # (v_chunk,) bool — BSP-deferred frontier
+    rangeq: Queue         # pending edge-range tasks (start, end, parent_bits)
+    updq: Queue           # spilled update messages (neighbor, value_bits)
+
+
+class Stats(NamedTuple):
+    rounds: jax.Array
+    epochs: jax.Array           # BSP frontier swaps (1 in async mode)
+    msgs_range: jax.Array       # range messages sent over the network
+    msgs_update: jax.Array      # update messages sent over the network
+    spills_range: jax.Array
+    spills_update: jax.Array
+    edges_scanned: jax.Array    # T2 work (== edges relaxed incl. replays)
+    updates_applied: jax.Array  # valid T3 folds
+    drops: jax.Array            # MUST be 0 — backpressure invariant
+    work_max: jax.Array         # max per-device edges_scanned (balance)
+
+    @staticmethod
+    def zero():
+        z = jnp.zeros((), jnp.int32)
+        return Stats(z, z, z, z, z, z, z, z, z, z)
+
+
+class GraphShard(NamedTuple):
+    """One device's chunk of the four dataset arrays (placed space)."""
+    ptr_start: jax.Array  # (v_chunk,) i32 global placed edge index
+    deg: jax.Array        # (v_chunk,) i32
+    edge_dst: jax.Array   # (e_chunk,) i32 placed dst (-1 pad)
+    edge_val: jax.Array   # (e_chunk,) f32
+
+
+# --------------------------------------------------------------------------
+# Per-device pipeline stages (pure; run under comm.run -> vmap or shard_map).
+# --------------------------------------------------------------------------
+
+def _budgets(cfg: EngineConfig, st: EngineState):
+    """The TSU: per-round budgets from queue occupancies (Section III-E)."""
+    rq_free = jnp.int32(cfg.cap_rangeq) - st.rangeq.count
+    if cfg.policy == "static":
+        f_pop = jnp.minimum(jnp.int32(cfg.f_pop), jnp.maximum(rq_free, 0))
+        r_pop = jnp.int32(cfg.r_pop)
+        u_pop = jnp.int32(cfg.u_pop)
+        return f_pop, r_pop, u_pop
+    # traffic-aware: high priority = drain a nearly-full IQ; medium = feed a
+    # nearly-empty OQ; throttle producers of congested consumers.
+    upd_congested = st.updq.count > (3 * cfg.cap_updq) // 4
+    rng_congested = st.rangeq.count > cfg.cap_rangeq // 2
+    u_pop = jnp.int32(cfg.u_pop)  # always drain updates first
+    r_pop = jnp.where(upd_congested, jnp.int32(cfg.r_pop // 4),
+                      jnp.int32(cfg.r_pop))
+    f_pop = jnp.where(rng_congested | upd_congested, jnp.int32(0),
+                      jnp.minimum(jnp.int32(cfg.f_pop),
+                                  jnp.maximum(rq_free - 2 * cfg.f_pop, 0)))
+    return f_pop, r_pop, u_pop
+
+
+def _take_first_k(mask: jax.Array, k: jax.Array, k_max: int):
+    """Indices of the first ``min(k, popcount)`` set bits, FIFO by position.
+
+    Returns (idx (k_max,) i32, valid (k_max,) bool, cleared_mask)."""
+    n = mask.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+    take = mask & (rank < k)
+    key = jnp.where(take, rank, jnp.int32(n) + ar)
+    order = jnp.argsort(key)[:k_max]
+    valid = take[order]
+    return order.astype(jnp.int32), valid, mask & ~take
+
+
+def _stage_a(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
+             sh: GraphShard, st: EngineState):
+    """T4 + T1: frontier -> range queue -> bounded range messages."""
+    f_pop, r_pop, _ = _budgets(cfg, st)
+
+    # T4: pop up to f_pop frontier vertices (paper: bitmap scan via IQ4).
+    vidx, vvalid, frontier = _take_first_k(st.frontier, f_pop, cfg.f_pop)
+    deg = sh.deg[vidx]
+    start = sh.ptr_start[vidx]
+    if alg.parent == "value_over_deg":
+        parent = st.value[vidx] / jnp.maximum(deg, 1).astype(jnp.float32)
+    else:
+        parent = st.value[vidx]
+    vvalid = vvalid & (deg > 0)
+    rows = jnp.stack([start, start + deg, f2i(parent)], axis=1)
+    rangeq, d0 = queue_push(st.rangeq, rows, vvalid)
+
+    # T1: pop ranges; emit one bounded message each; push back the remainder.
+    taken, tvalid, rangeq = queue_take_front(rangeq, r_pop, cfg.r_pop)
+    t_start, t_end, t_pb = taken[:, 0], taken[:, 1], taken[:, 2]
+    boundary = (t_start // e_chunk + 1) * e_chunk
+    stop = jnp.minimum(jnp.minimum(t_end, boundary), t_start + cfg.max_t2)
+    msgs = jnp.stack([t_start, stop, t_pb], axis=1)
+    dest = t_start // e_chunk
+    rem = jnp.stack([stop, t_end, t_pb], axis=1)
+    rangeq, d1 = queue_push(rangeq, rem, tvalid & (stop < t_end))
+
+    st = st._replace(frontier=frontier, rangeq=rangeq)
+    return st, msgs, tvalid, dest, d0 + d1
+
+
+def _stage_b(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int, v_chunk: int,
+             sh: GraphShard, st: EngineState, recv, recv_valid,
+             spill, spill_valid):
+    """T2: scan local edges for each received range message; emit updates.
+
+    Also replays spilled range messages (back into the range queue) and pops
+    previously spilled updates so they are retried ahead of fresh traffic.
+    """
+    rangeq, d0 = queue_push(st.rangeq, spill, spill_valid)
+
+    r_start, r_stop, r_pb = recv[:, 0], recv[:, 1], recv[:, 2]
+    length = jnp.where(recv_valid, r_stop - r_start, 0)
+    local0 = jnp.where(recv_valid, r_start % e_chunk, 0)
+    j = jnp.arange(cfg.max_t2, dtype=jnp.int32)[None, :]
+    eidx = local0[:, None] + j                      # (R, MAX_T2)
+    jvalid = recv_valid[:, None] & (j < length[:, None])
+    eidx_c = jnp.minimum(eidx, e_chunk - 1)
+    nb = sh.edge_dst[eidx_c]
+    w = sh.edge_val[eidx_c]
+    jvalid = jvalid & (nb >= 0)
+    out = jnp.broadcast_to(_emit(alg, i2f(r_pb)[:, None], w), nb.shape)
+    fresh = jnp.stack([nb.reshape(-1), f2i(out).reshape(-1)], axis=1)
+    fresh_valid = jvalid.reshape(-1)
+    edges = jvalid.sum(dtype=jnp.int32)
+
+    _, _, u_pop = _budgets(cfg, st)
+    replay, replay_valid, updq = queue_take_front(st.updq, u_pop, cfg.u_pop)
+    upd = jnp.concatenate([replay, fresh], axis=0)
+    uvalid = jnp.concatenate([replay_valid, fresh_valid], axis=0)
+    dest = upd[:, 0] // v_chunk
+
+    st = st._replace(rangeq=rangeq, updq=updq)
+    return st, upd, uvalid, dest, edges, d0
+
+
+def _stage_c(me, cfg: EngineConfig, alg: AlgSpec, v_chunk: int,
+             st: EngineState, recv, recv_valid, spill, spill_valid):
+    """T3: fold received updates into the local shard; grow the frontier."""
+    updq, d0 = queue_push(st.updq, spill, spill_valid)
+
+    nb, vb = recv[:, 0], recv[:, 1]
+    lidx = jnp.where(recv_valid, nb % v_chunk, v_chunk)  # pad -> trash slot
+    val = i2f(vb)
+    applied = recv_valid.sum(dtype=jnp.int32)
+    if alg.kind == "min":
+        ext = jnp.concatenate([st.value, jnp.full((1,), INF, jnp.float32)])
+        after = ext.at[lidx].min(jnp.where(recv_valid, val, INF))[:v_chunk]
+        improved = after < st.value
+        if cfg.mode == "async":
+            st = st._replace(value=after, frontier=st.frontier | improved)
+        else:
+            st = st._replace(value=after,
+                             next_frontier=st.next_frontier | improved)
+    else:  # add
+        ext = jnp.concatenate([st.acc, jnp.zeros((1,), jnp.float32)])
+        acc = ext.at[lidx].add(jnp.where(recv_valid, val, 0.0))[:v_chunk]
+        st = st._replace(acc=acc)
+    return st._replace(updq=updq), applied, d0
+
+
+def _pending(me, st: EngineState):
+    return (st.rangeq.count + st.updq.count
+            + st.frontier.sum(dtype=jnp.int32))
+
+
+def _next_pending(me, st: EngineState):
+    return st.next_frontier.sum(dtype=jnp.int32)
+
+
+def _bsp_swap(me, st: EngineState, do_swap):
+    frontier = jnp.where(do_swap, st.frontier | st.next_frontier, st.frontier)
+    nxt = jnp.where(do_swap, jnp.zeros_like(st.next_frontier),
+                    st.next_frontier)
+    return st._replace(frontier=frontier, next_frontier=nxt)
+
+
+# --------------------------------------------------------------------------
+# The round + driver, parametric over the comm backend.
+# --------------------------------------------------------------------------
+
+def make_round(comm, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
+               v_chunk: int, shard: GraphShard):
+    """Build the per-round function (state, stats) -> (state, stats, pending)."""
+
+    def stage_a(me, sh, st):
+        return _stage_a(me, cfg, alg, e_chunk, sh, st)
+
+    def stage_b(me, sh, st, recv, rv, sp, spv):
+        return _stage_b(me, cfg, alg, e_chunk, v_chunk, sh, st, recv, rv,
+                        sp, spv)
+
+    def stage_c(me, st, recv, rv, sp, spv):
+        return _stage_c(me, cfg, alg, v_chunk, st, recv, rv, sp, spv)
+
+    def rnd(st: EngineState, stats: Stats):
+        st, msgs, mvalid, mdest, drop_a = comm.run(stage_a, shard, st)
+        routed = route_tasks(comm, msgs, mvalid, mdest, cfg.cap_route_range)
+        st, upd, uvalid, udest, edges, drop_b = comm.run(
+            stage_b, shard, st, routed.recv, routed.recv_valid,
+            routed.spill, routed.spill_valid)
+        routed2 = route_tasks(comm, upd, uvalid, udest, cfg.cap_route_update)
+        st, applied, drop_c = comm.run(
+            stage_c, st, routed2.recv, routed2.recv_valid,
+            routed2.spill, routed2.spill_valid)
+
+        pending = comm.psum(comm.run(_pending, st))
+        nxt = comm.psum(comm.run(_next_pending, st))
+        if cfg.mode == "bsp":
+            do_swap = (pending == 0) & (nxt > 0)
+            st = comm.run(_bsp_swap, st, _bcast(comm, do_swap))
+            epochs_inc = do_swap
+            pending = pending + nxt
+        else:
+            epochs_inc = jnp.zeros_like(pending)
+
+        spills_r = comm.psum(comm.run(
+            lambda me, v: v.sum(dtype=jnp.int32), routed.spill_valid))
+        spills_u = comm.psum(comm.run(
+            lambda me, v: v.sum(dtype=jnp.int32), routed2.spill_valid))
+        drops = comm.psum(drop_a + drop_b + drop_c)
+        edges_t = comm.psum(edges)
+        edges_m = comm.pmax(edges)
+        stats = Stats(
+            rounds=stats.rounds + 1,
+            epochs=stats.epochs + _scalar(epochs_inc),
+            msgs_range=stats.msgs_range + _scalar(comm.psum(routed.sent)),
+            msgs_update=stats.msgs_update + _scalar(comm.psum(routed2.sent)),
+            spills_range=stats.spills_range + _scalar(spills_r),
+            spills_update=stats.spills_update + _scalar(spills_u),
+            edges_scanned=stats.edges_scanned + _scalar(edges_t),
+            updates_applied=stats.updates_applied
+            + _scalar(comm.psum(applied)),
+            drops=stats.drops + _scalar(drops),
+            work_max=stats.work_max + _scalar(edges_m),
+        )
+        return st, stats, _scalar(pending)
+
+    return rnd
+
+
+def _scalar(x):
+    """Collapse a LocalComm broadcast (T,) vector to a scalar; id on scalars."""
+    return x if x.ndim == 0 else x[0]
+
+
+def _bcast(comm, x):
+    """Broadcast a global scalar back to per-device shape for comm.run."""
+    if isinstance(comm, LocalComm):
+        return jnp.broadcast_to(x, (comm.size,))
+    return x
+
+
+def init_state(comm, cfg: EngineConfig, v_chunk: int,
+               value, frontier) -> EngineState:
+    """value/frontier: (T, v_chunk) under LocalComm, (v_chunk,) under Axis."""
+    lead = (comm.size,) if isinstance(comm, LocalComm) else ()
+
+    def mk_queue(cap, w):
+        q = queue_make(cap, w)
+        if lead:
+            return Queue(jnp.broadcast_to(q.data, lead + q.data.shape),
+                         jnp.broadcast_to(q.count, lead))
+        return q
+
+    return EngineState(
+        value=value,
+        acc=jnp.zeros(lead + (v_chunk,), jnp.float32),
+        frontier=frontier,
+        next_frontier=jnp.zeros(lead + (v_chunk,), bool),
+        rangeq=mk_queue(cfg.cap_rangeq, 3),
+        updq=mk_queue(cfg.cap_updq, 2),
+    )
+
+
+def run_engine(comm, cfg: EngineConfig, alg: AlgSpec, shard: GraphShard,
+               st: EngineState, e_chunk: int, v_chunk: int):
+    """Run rounds until the global idle signal fires (or max_rounds)."""
+    cfg.validate(comm.size)
+    rnd = make_round(comm, cfg, alg, e_chunk, v_chunk, shard)
+
+    def cond(carry):
+        _, _, pending, r = carry
+        return (pending > 0) & (r < cfg.max_rounds)
+
+    def body(carry):
+        st, stats, _, r = carry
+        st, stats, pending = rnd(st, stats)
+        return st, stats, pending, r + 1
+
+    pending0 = _scalar(comm.psum(comm.run(_pending, st)))
+    st, stats, _, _ = jax.lax.while_loop(
+        cond, body, (st, Stats.zero(), pending0, jnp.int32(0)))
+    return st, stats

@@ -1,0 +1,125 @@
+"""Fixed-capacity, jit-compatible FIFO queues.
+
+These are the software analogue of Dalorex's circular FIFO task queues,
+which the paper implements inside each tile's scratchpad (Section III-E).
+A queue is a pytree ``(data, count)`` where ``data`` is a ``(cap, width)``
+array whose first ``count`` rows are valid, stored in FIFO order and always
+compacted to the front. Every operation is static-shape (jit/scan/while_loop
+safe) and costs O(cap log cap) for the order-preserving compactions.
+
+All queues store int32; float payloads are bitcast via :func:`f2i`/:func:`i2f`
+so a single dtype flows through the network buffers — mirroring the paper's
+32-bit flits ("A 32-bit Dalorex can process graphs of up to 2^32 edges").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Queue(NamedTuple):
+    data: jax.Array  # (cap, width) int32
+    count: jax.Array  # () int32
+
+
+def f2i(x: jax.Array) -> jax.Array:
+    """Bitcast float32 -> int32 (a 32-bit flit)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+
+
+def i2f(x: jax.Array) -> jax.Array:
+    """Bitcast int32 -> float32."""
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def queue_make(cap: int, width: int) -> Queue:
+    return Queue(jnp.zeros((cap, width), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def queue_free(q: Queue) -> jax.Array:
+    return q.data.shape[0] - q.count
+
+
+def queue_push(q: Queue, rows: jax.Array, mask: jax.Array) -> tuple[Queue, jax.Array]:
+    """Append ``rows[mask]`` (preserving row order) to the queue tail.
+
+    Rows that would exceed capacity are dropped and counted — callers are
+    expected to have reserved space (credit/budget) so that ``dropped == 0``;
+    the counter exists so tests and production monitors can assert the
+    backpressure invariant, like the paper's "CQ full" check.
+
+    Returns (new_queue, n_dropped).
+    """
+    cap = q.data.shape[0]
+    mask = mask.astype(jnp.int32)
+    offs = q.count + jnp.cumsum(mask) - mask  # target slot for each masked row
+    ok = (mask == 1) & (offs < cap)
+    # Scatter into an extended buffer; row `cap` is the trash slot.
+    idx = jnp.where(ok, offs, cap)
+    ext = jnp.concatenate([q.data, jnp.zeros((1, q.data.shape[1]), jnp.int32)], 0)
+    ext = ext.at[idx].set(rows)
+    n_push = ok.sum(dtype=jnp.int32)
+    n_drop = mask.sum(dtype=jnp.int32) - n_push
+    return Queue(ext[:cap], q.count + n_push), n_drop
+
+
+def queue_take(q: Queue, take_mask: jax.Array) -> tuple[jax.Array, jax.Array, Queue]:
+    """Remove entries selected by ``take_mask`` (bool over all cap slots).
+
+    Only slots < count participate. Returns ``(taken_rows, taken_valid, q')``
+    where taken rows are compacted to the front of a (cap, width) buffer in
+    FIFO order and the remaining queue is re-compacted, order preserved.
+    """
+    cap = q.data.shape[0]
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    valid = ar < q.count
+    take = take_mask & valid
+    keep = valid & ~take
+    big = jnp.int32(cap)
+    # Unique keys -> deterministic order-preserving partition.
+    perm_t = jnp.argsort(jnp.where(take, ar, big + ar))
+    n_t = take.sum(dtype=jnp.int32)
+    taken = q.data[perm_t]
+    taken_valid = ar < n_t
+    perm_k = jnp.argsort(jnp.where(keep, ar, big + ar))
+    kept = q.data[perm_k]
+    n_k = keep.sum(dtype=jnp.int32)
+    return taken, taken_valid, Queue(kept, n_k)
+
+
+def queue_take_front(q: Queue, n: jax.Array, max_n: int) -> tuple[jax.Array, jax.Array, Queue]:
+    """Pop the first ``min(n, count)`` entries (FIFO). ``max_n`` is the static
+    bound on n; the returned buffer has shape (max_n, width)."""
+    cap = q.data.shape[0]
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    n = jnp.minimum(n, q.count).astype(jnp.int32)
+    taken_full, tv_full, q2 = queue_take(q, ar < n)
+    return taken_full[:max_n], tv_full[:max_n], q2
+
+
+def occurrence_index(dest: jax.Array, valid: jax.Array, num_dest: int) -> jax.Array:
+    """For each valid element, its 0-based occurrence rank among earlier valid
+    elements with the same ``dest``. Invalid elements get rank >= cap.
+
+    This is the vectorized equivalent of the paper's per-channel slot
+    assignment: element i may claim slot ``occ[i]`` of channel ``dest[i]``.
+    """
+    cap = dest.shape[0]
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    d = jnp.where(valid, dest, num_dest)  # invalid -> trash group
+    order = jnp.argsort(d * jnp.int32(cap) + ar)  # unique keys: group, then FIFO
+    ds = d[order]
+    new_grp = jnp.concatenate([jnp.ones((1,), bool), ds[1:] != ds[:-1]])
+    grp_start = jax.lax.associative_scan(jnp.maximum, jnp.where(new_grp, ar, 0))
+    occ_sorted = ar - grp_start
+    occ = jnp.zeros((cap,), jnp.int32).at[order].set(occ_sorted)
+    return jnp.where(valid, occ, jnp.int32(cap))
+
+
+def histogram(dest: jax.Array, valid: jax.Array, num_dest: int) -> jax.Array:
+    """Per-destination counts of valid elements."""
+    return jnp.zeros((num_dest,), jnp.int32).at[
+        jnp.where(valid, dest, num_dest - 1)
+    ].add(valid.astype(jnp.int32))

@@ -1,0 +1,14 @@
+"""jit'd entry point: Pallas flash kernel (TPU target; interpret=True on
+CPU) or the jnp oracle."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, window: int = 0, use_pallas: bool = False,
+              interpret: bool = True, **kw):
+    if use_pallas:
+        return flash_attention(q, k, v, window=window, interpret=interpret,
+                               **kw)
+    return attention_ref(q, k, v, window=window)

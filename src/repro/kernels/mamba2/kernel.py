@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD recurrence.
+
+Grid (B, H): one head's sequence resident in VMEM, chunk-stepped fori_loop,
+(P, N) state in VMEM scratch — same algorithm as ref.ssd_chunked.
+B/C projections are shared across heads (ngroups=1), so their blocks are
+indexed by batch only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, al_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
+                state_scr, *, chunk, n_chunks):
+    state_scr[...] = s0_ref[0, 0]
+    a_log = al_ref[0]  # scalar for this head
+
+    def body(c, _):
+        sl = pl.ds(c * chunk, chunk)
+        xb = x_ref[0, sl, 0, :].astype(jnp.float32)   # (C, P)
+        db = dt_ref[0, sl, 0].astype(jnp.float32)     # (C,)
+        bb = b_ref[0, sl, :].astype(jnp.float32)      # (C, N)
+        cb = c_ref[0, sl, :].astype(jnp.float32)      # (C, N)
+        lb = jnp.clip(-jnp.exp(a_log) * db, -4.0, 0.0)
+        L = jnp.cumsum(lb)
+        state = state_scr[...]                        # (P, N)
+        y_inter = jax.lax.dot(cb * jnp.exp(L)[:, None], state.T,
+                              preferred_element_type=jnp.float32)  # (C, P)
+        cb_dot_bb = jax.lax.dot_general(
+            cb, bb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (C, C) [t, s]
+        decay = jnp.exp(L[:, None] - L[None, :])
+        tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+               >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+        att = jnp.where(tri, cb_dot_bb * decay, 0.0)
+        y_intra = jax.lax.dot(att * db[None, :], xb,
+                              preferred_element_type=jnp.float32)
+        y_ref[0, sl, 0, :] = (y_inter + y_intra).astype(y_ref.dtype)
+        wgt = jnp.exp(L[-1] - L) * db                 # (C,)
+        state_scr[...] = jnp.exp(L[-1]) * state + jax.lax.dot_general(
+            xb * wgt[:, None], bb, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+    sT_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, a_log, Bm, Cm, state0=None, chunk: int = 16,
+               interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); Bm, Cm: (B,S,N)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk,
+                               n_chunks=S // chunk)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, S, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+            pl.BlockSpec((1, S, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), dt.astype(jnp.float32), a_log,
+      Bm.astype(jnp.float32), Cm.astype(jnp.float32), state0)
+    return y, sT

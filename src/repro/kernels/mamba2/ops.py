@@ -1,0 +1,20 @@
+"""jit'd entry point for the Mamba2 SSD recurrence: Pallas TPU kernel or the
+chunked jnp reference (same chunked algorithm)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mamba2 import ref
+
+
+def ssd(x, dt, a_log, Bm, Cm, state0=None, use_pallas: bool = False,
+        chunk: int = 16):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); Bm,Cm: (B,S,N)."""
+    if x.shape[1] == 1 and state0 is not None:  # decode fast path
+        state, y = ref.ssd_step(state0, x[:, 0], dt[:, 0], a_log,
+                                Bm[:, 0], Cm[:, 0])
+        return y[:, None], state
+    if use_pallas:
+        from repro.kernels.mamba2.kernel import ssd_pallas
+        return ssd_pallas(x, dt, a_log, Bm, Cm, state0=state0, chunk=chunk)
+    return ref.ssd_chunked(x, dt, a_log, Bm, Cm, state0=state0, chunk=chunk)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence, chunked form.
+
+Per head with head dim P and state dim N, scalar-per-head decay
+a_t = exp(-exp(A_log) * dt_t):
+
+    h_t = a_t h_{t-1} + dt_t * x_t B_t^T        (state P x N)
+    y_t = h_t C_t
+
+Chunked closed form (L_t = inclusive cumsum of log a within the chunk):
+
+    y_t = C_t (exp(L_t) h_prev)^T
+        + sum_{s<=t} exp(L_t - L_s) dt_s (C_t . B_s) x_s
+    h'  = exp(L_last) h_prev + sum_s exp(L_last - L_s) dt_s x_s B_s^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_step(state, x, dt, a_log, Bv, Cv):
+    """One decode step.  state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    a_log: (H,) (= -exp(A_log) pre-scaled by caller? No: raw A_log);
+    Bv, Cv: (B,N).  Returns (new_state, y (B,H,P))."""
+    a = jnp.exp(jnp.clip(-jnp.exp(a_log)[None] * dt, -4.0, 0.0))  # (B,H)
+    new_state = (a[..., None, None] * state
+                 + (dt[..., None] * x)[..., None] * Bv[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cv)
+    return new_state, y
+
+
+def ssd_chunked(x, dt, a_log, Bm, Cm, state0=None, chunk: int = 64):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); Bm, Cm: (B,S,N).
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    # clip per-step log decay so chunk-local cumulated exponents stay inside
+    # the fp32 exp range (matches ssd_step; e^-4/step ~ 0 within 2-3 steps)
+    loga = jnp.clip(-jnp.exp(a_log)[None, None] * dt, -4.0, 0.0)  # (B,S,H)
+    xc = x.reshape(B, n, chunk, H, P).swapaxes(0, 1)
+    dc = dt.reshape(B, n, chunk, H).swapaxes(0, 1)
+    lc = loga.reshape(B, n, chunk, H).swapaxes(0, 1)
+    bc = Bm.reshape(B, n, chunk, N).swapaxes(0, 1)
+    cc = Cm.reshape(B, n, chunk, N).swapaxes(0, 1)
+
+    def body(state, xs):
+        xb, db, lb, bb, cb = xs  # (B,C,H,P), (B,C,H), (B,C,H), (B,C,N)
+        L = jnp.cumsum(lb, axis=1)  # (B,C,H) inclusive
+        # inter-chunk
+        y_inter = jnp.einsum("bcn,bhpn,bch->bchp", cb, state, jnp.exp(L))
+        # intra-chunk (s <= t)
+        cb_dot_bb = jnp.einsum("btn,bsn->bts", cb, bb)  # (B,C,C)
+        decay = jnp.exp(L[:, :, None] - L[:, None])     # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        att = jnp.where(tri[None, :, :, None],
+                        cb_dot_bb[..., None] * decay, 0.0)  # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", att, db, xb)
+        y = y_inter + y_intra
+        # state update
+        dec_all = jnp.exp(L[:, -1])                      # (B,H)
+        wgt = jnp.exp(L[:, -1][:, None] - L) * db        # (B,C,H)
+        s_new = dec_all[..., None, None] * state + jnp.einsum(
+            "bch,bchp,bcn->bhpn", wgt, xb, bb)
+        return s_new, y
+
+    state, ys = jax.lax.scan(body, state0, (xc, dc, lc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y, state
+
+
+def ssd_scan_oracle(x, dt, a_log, Bm, Cm, state0=None):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(state, xs):
+        xt, dtt, bt, ct = xs
+        state, y = ssd_step(state, xt, dtt, a_log, bt, ct)
+        return state, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1),
+          Cm.swapaxes(0, 1))
+    state, ys = jax.lax.scan(body, state0, xs)
+    return ys.swapaxes(0, 1), state

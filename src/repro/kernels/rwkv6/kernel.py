@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the chunked WKV6 recurrence.
+
+Grid (B, H): each cell owns one head's full sequence in VMEM
+(S x K fp32 x 4 tensors; S=4096, K=64 -> 4 MB) and walks it chunk by chunk
+with a fori_loop, carrying the (K, K) state in VMEM scratch — the same
+chunked algorithm as ref.wkv6_chunked, so the two agree to float tolerance.
+
+This is data-local by construction: the recurrence state never leaves the
+core's VMEM; only the (B,S,H,K) activations stream in/out of HBM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 state_scr, *, chunk, n_chunks):
+    state_scr[...] = s0_ref[0, 0]
+    u = u_ref[0].astype(jnp.float32)                 # (K,)
+
+    def body(c, _):
+        sl = pl.ds(c * chunk, chunk)
+        rb = r_ref[0, sl, 0, :].astype(jnp.float32)  # (C, K)
+        kb = k_ref[0, sl, 0, :].astype(jnp.float32)
+        vb = v_ref[0, sl, 0, :].astype(jnp.float32)
+        wb = w_ref[0, sl, 0, :].astype(jnp.float32)  # log decay
+        L = jnp.cumsum(wb, axis=0)
+        pex = L - wb
+        r_in = rb * jnp.exp(pex)
+        state = state_scr[...]
+        y_inter = jax.lax.dot(r_in, state,
+                              preferred_element_type=jnp.float32)
+        att = jax.lax.dot_general(
+            r_in, kb * jnp.exp(-L), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (C, C)
+        tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+               > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+        att = jnp.where(tri, att, 0.0)
+        y_intra = jax.lax.dot(att, vb, preferred_element_type=jnp.float32)
+        y_diag = ((rb * u[None] * kb).sum(-1, keepdims=True)) * vb
+        y_ref[0, sl, 0, :] = (y_inter + y_intra + y_diag).astype(y_ref.dtype)
+        decay_all = jnp.exp(L[-1])                   # (K,)
+        k_dec = kb * jnp.exp(L[-1][None] - L)
+        state_scr[...] = decay_all[:, None] * state + jax.lax.dot_general(
+            k_dec, vb, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+    sT_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w_log, u, state0=None, chunk: int = 16,
+                interpret: bool = True):
+    """r,k,v,w_log: (B,S,H,K) fp32; u: (H,K).  Returns (y, final state)."""
+    B, S, H, K = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, K), jnp.float32)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk,
+                               n_chunks=S // chunk)
+    seq_spec = pl.BlockSpec((1, S, 1, K), lambda b, h: (b, 0, h, 0))
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, K), lambda b, h: (h, 0)),
+                  pl.BlockSpec((1, 1, K, K), lambda b, h: (b, h, 0, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, 1, K, K), lambda b, h: (b, h, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, K), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, K, K), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w_log, u, state0)
+    return y, sT

@@ -1,0 +1,25 @@
+"""jit'd entry point for the WKV6 recurrence: picks the Pallas TPU kernel or
+the chunked jnp reference (bit-compatible algorithm, same chunking)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ref
+
+
+def wkv6(r, k, v, w_log, u, state0=None, use_pallas: bool = False,
+         chunk: int = 16):
+    """r,k,v,w_log: (B,S,H,K); u: (H,K).  Returns (y, final_state)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w_log = w_log.astype(jnp.float32)
+    if r.shape[1] == 1 and state0 is not None:  # decode fast path
+        sq = lambda a: a[:, 0]
+        state, y = ref.wkv6_step(state0, sq(r), sq(k), sq(v),
+                                 jnp.exp(sq(w_log)), u)
+        return y[:, None], state
+    if use_pallas:
+        from repro.kernels.rwkv6.kernel import wkv6_pallas
+        return wkv6_pallas(r, k, v, w_log, u, state0=state0, chunk=chunk)
+    return ref.wkv6_chunked(r, k, v, w_log, u, state0=state0, chunk=chunk)

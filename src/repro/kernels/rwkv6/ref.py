@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence, chunked form.
+
+Per head with key/value dim K, data-dependent per-channel decay w_t in (0,1):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state K x K)
+    y_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t    (u = per-channel bonus)
+
+The chunked closed form (the algorithm the Pallas kernel implements):
+within a chunk of C steps, with L_t = inclusive cumsum of log w and
+Pex_t = L_t - log w_t (exclusive),
+
+    y_t = (r_t * exp(Pex_t)) S_prev
+        + sum_{s<t} (r_t . (k_s * exp(Pex_t - L_s))) v_s
+        + (r_t . (u * k_t)) v_t
+    S'  = diag(exp(L_{C-1})) S_prev + sum_s diag(exp(L_{C-1} - L_s)) k_s^T v_s
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_step(state, r, k, v, w, u):
+    """One decode step.  state: (B,H,K,K); r,k,v,w: (B,H,K); u: (H,K).
+    Returns (new_state, y (B,H,K))."""
+    y = jnp.einsum("bhk,bhkv->bhv", r, state) \
+        + jnp.einsum("bhk,bhk,bhv->bhv", r, u[None] * k, v)
+    new_state = w[..., None] * state + k[..., None] * v[..., None, :]
+    return new_state, y
+
+
+def wkv6_chunked(r, k, v, w_log, u, state0=None, chunk: int = 64):
+    """r,k,v: (B,S,H,K) fp32; w_log: (B,S,H,K) = log decay (<= 0);
+    u: (H,K).  Returns (y (B,S,H,K), final state (B,H,K,K))."""
+    B, S, H, K = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    rc = r.reshape(B, n, chunk, H, K).swapaxes(0, 1)
+    kc = k.reshape(B, n, chunk, H, K).swapaxes(0, 1)
+    vc = v.reshape(B, n, chunk, H, K).swapaxes(0, 1)
+    wc = w_log.reshape(B, n, chunk, H, K).swapaxes(0, 1)
+
+    def body(state, xs):
+        rb, kb, vb, wb = xs  # (B, C, H, K)
+        L = jnp.cumsum(wb, axis=1)              # inclusive
+        pex = L - wb                            # exclusive
+        r_in = rb * jnp.exp(pex)
+        # inter-chunk: y += (r * exp(Pex)) @ S_prev
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_in, state)
+        # intra-chunk strictly-lower-triangular attention
+        att = jnp.einsum("bthk,bshk->bhts", r_in, kb * jnp.exp(-L))
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhts,bshv->bthv", att, vb)
+        # diagonal bonus term
+        y_diag = jnp.einsum("bchk,bchk,bchv->bchv", rb, u[None, None] * kb,
+                            vb)
+        y = y_inter + y_intra + y_diag
+        # state update
+        decay_all = jnp.exp(L[:, -1])           # (B, H, K)
+        k_dec = kb * jnp.exp(L[:, -1][:, None] - L)
+        s_new = decay_all[..., None] * state + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec, vb)
+        return s_new, y
+
+    state, ys = jax.lax.scan(body, state0, (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, K)
+    return y, state
+
+
+def wkv6_scan_oracle(r, k, v, w_log, u, state0=None):
+    """Step-by-step scan — the ground truth the chunked form must match."""
+    B, S, H, K = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, K), jnp.float32)
+    w = jnp.exp(w_log)
+
+    def body(state, xs):
+        rt, kt, vt, wt = xs
+        state, y = wkv6_step(state, rt, kt, vt, wt, u)
+        return state, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(body, state0, xs)
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,64 @@
+"""Pallas TPU binned segment scatter — the Dalorex T3 apply step.
+
+The routing engine delivers updates already *binned by owner block* (that is
+the whole point of the data-local model), so the kernel never contends:
+grid cell i folds its own updates into its own block of the value array —
+atomic-free by ownership, exactly Section III-A.
+
+TPU adaptation: scatters are hostile to the VPU, so the fold is expressed
+as dense one-hot algebra on an MXU/VPU-friendly (cap, b) tile:
+
+  add:  y += vals @ onehot           (one 128x-aligned matmul)
+  min:  y = min(y, min_c where(onehot, vals, +inf))  (masked row reduce)
+
+Duplicate indices within a bin are handled correctly by both forms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.4e38  # python float: pallas kernels cannot capture traced consts
+
+
+def _scatter_kernel(base_ref, idx_ref, vals_ref, out_ref, *, op):
+    base = base_ref[0].astype(jnp.float32)          # (b,)
+    idx = idx_ref[0]                                # (cap,)
+    vals = vals_ref[0].astype(jnp.float32)          # (cap,)
+    b = base.shape[0]
+    cap = idx.shape[0]
+    onehot = (idx[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (cap, b), 1))
+    onehot &= (idx >= 0)[:, None]
+    if op == "add":
+        contrib = jax.lax.dot(vals[None, :].astype(jnp.float32),
+                              onehot.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)[0]
+        out_ref[0] = base + contrib
+    else:  # min
+        masked = jnp.where(onehot, vals[:, None], INF)
+        out_ref[0] = jnp.minimum(base, masked.min(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def scatter_segments(base, idx, vals, op: str = "min",
+                     interpret: bool = True):
+    """base: (NB, b) f32; idx: (NB, cap) i32 (-1 empty); vals: (NB, cap)."""
+    nb, b = base.shape
+    cap = idx.shape[1]
+    kernel = functools.partial(_scatter_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.float32),
+        interpret=interpret,
+    )(base, idx, vals)

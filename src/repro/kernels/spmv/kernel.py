@@ -1,0 +1,68 @@
+"""Pallas TPU block-ELL SpMV — the paper's SPMV workload adapted to the MXU.
+
+Dalorex on a TPU core grid: each (row-block) is a tile's *owned* data — all
+accumulation into y happens at its owner (atomic-free, Section III-A); the
+gather of x column-blocks is the arriving task message.  The column index
+drives the x BlockSpec through **scalar prefetch** (the TPU-native form of
+the paper's headerless index-routing: the index IS the route, here it IS the
+DMA descriptor).
+
+Grid (row_blocks, slots); x blocks stream by bcols[i, s]; empty slots point
+at a zero pad block.  Block size 128 aligns the MXU; VMEM per step =
+(128x128 + 2x128) fp32 ~ 66 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(bcols_ref, bvals_ref, x_ref, y_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    i = pl.program_id(0)
+    col = bcols_ref[i, s]
+
+    @pl.when(col >= 0)
+    def _acc():
+        blk = bvals_ref[0, 0].astype(jnp.float32)   # (b, b)
+        xb = x_ref[0].astype(jnp.float32)           # (b,)
+        y_ref[...] += (blk @ xb[:, None])[:, 0].reshape(y_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_block_ell(bvals, bcols, x_pad, interpret: bool = True):
+    """bvals: (NB, S, b, b); bcols: (NB, S) i32 (-1 empty);
+    x_pad: (NB*b,).  Returns y (NB*b,) f32."""
+    nb, slots, b, _ = bvals.shape
+    # -1 -> the zero pad block appended at index nb (never read: masked by
+    # pl.when, but the index map must stay in range)
+    x_blocks = jnp.concatenate(
+        [x_pad.reshape(nb, b), jnp.zeros((1, b), x_pad.dtype)], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, b, b), lambda i, s, cols: (i, s, 0, 0)),
+            pl.BlockSpec(
+                (1, b),
+                lambda i, s, cols: (jnp.where(cols[i, s] >= 0,
+                                              cols[i, s], nb), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i, s, cols: (i, 0)),
+    )
+    y = pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.float32),
+        interpret=interpret,
+    )(bcols, bvals, x_blocks)
+    return y.reshape(nb * b)

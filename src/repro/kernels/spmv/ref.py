@@ -1,0 +1,55 @@
+"""Oracles + host-side format conversion for block-ELL SpMV."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def to_block_ell(n: int, rows, cols, vals, block: int, slots: int | None
+                 = None):
+    """COO -> block-ELL.  Returns (bvals (NB,S,b,b) f32, bcols (NB,S) i32,
+    n_pad).  bcols -1 marks an empty slot.  Raises if a row-block needs more
+    than ``slots`` column-blocks (caller picks slots from the histogram)."""
+    nb = (n + block - 1) // block
+    n_pad = nb * block
+    buckets: dict[tuple[int, int], np.ndarray] = {}
+    for r, c, v in zip(rows, cols, vals):
+        key = (int(r) // block, int(c) // block)
+        blk = buckets.get(key)
+        if blk is None:
+            blk = buckets[key] = np.zeros((block, block), np.float32)
+        blk[int(r) % block, int(c) % block] += v
+    per_row: dict[int, list] = {}
+    for (br, bc), blk in sorted(buckets.items()):
+        per_row.setdefault(br, []).append((bc, blk))
+    width = max((len(v) for v in per_row.values()), default=1)
+    if slots is None:
+        slots = width
+    assert width <= slots, f"row-block needs {width} slots > {slots}"
+    bvals = np.zeros((nb, slots, block, block), np.float32)
+    bcols = np.full((nb, slots), -1, np.int32)
+    for br, lst in per_row.items():
+        for s, (bc, blk) in enumerate(lst):
+            bvals[br, s] = blk
+            bcols[br, s] = bc
+    return bvals, bcols, n_pad
+
+
+def spmv_dense_ref(n: int, rows, cols, vals, x):
+    """y = A x oracle."""
+    y = np.zeros(n, np.float64)
+    np.add.at(y, np.asarray(rows),
+              np.asarray(vals, np.float64) * np.asarray(x)[np.asarray(cols)])
+    return y
+
+
+def block_ell_ref(bvals, bcols, x_pad):
+    """Pure-numpy block-ELL SpMV (the kernel's direct oracle)."""
+    nb, slots, b, _ = bvals.shape
+    y = np.zeros(nb * b, np.float64)
+    for i in range(nb):
+        for s in range(slots):
+            c = bcols[i, s]
+            if c >= 0:
+                y[i * b:(i + 1) * b] += bvals[i, s].astype(np.float64) @ \
+                    x_pad[c * b:(c + 1) * b]
+    return y

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production mesh (16x16 single-pod, 2x16x16 multi-pod) and extract the
+roofline terms from the compiled artifact.
+
+The two lines above MUST run before any other import — jax locks the device
+count at first initialization.
+
+Per cell we record:
+  * memory_analysis()      — proves the cell fits per-device HBM,
+  * cost_analysis()        — HLO FLOPs / bytes for the roofline,
+  * collective bytes       — parsed from the partitioned HLO text, summed
+                             per collective kind (all-gather, all-reduce,
+                             reduce-scatter, all-to-all, collective-permute),
+  * analytic MODEL_FLOPS   — 6·N·D (dense) / 6·N_active·D (MoE),
+  * the three roofline terms in seconds (v5e: 197 TF/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI) and the dominant bottleneck.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod/--single-pod/--both]
+Artifacts: one JSON per cell under --out (default benchmarks/artifacts/).
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ALL_SHAPES, SHAPES, get_config, list_archs, \
+    shape_applicable  # noqa: E402
+from repro.launch import specs as sp  # noqa: E402
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.parallel.sharding import mesh_context  # noqa: E402
+from repro.runtime.trainer import TrainConfig, make_train_step  # noqa: E402
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+from repro.launch.hloparse import (_COLLECTIVES, _DTYPE_BYTES,  # noqa
+                                  _shape_bytes, collective_bytes)
+
+
+def roofline(cell: dict) -> dict:
+    """The three roofline terms (seconds) + dominant bottleneck.
+
+    compute term uses analytic MODEL_FLOPS (the MFU convention — the HLO
+    flop counter sees a scan body once); memory/collective terms prefer the
+    probe-extrapolated totals (exact per-layer counts from the unrolled
+    two-point probe) and fall back to the raw full-compile counts.
+    """
+    flops_meas = cell["cost_analysis"].get("flops", 0.0) or 0.0
+    probe = cell.get("probe", {})
+    flops_hlo = probe.get("flops_est", flops_meas)
+    bytes_acc = probe.get("bytes_est",
+                          cell["cost_analysis"].get("bytes accessed", 0.0))
+    coll = probe.get("collective_bytes_est",
+                     cell["collectives"]["total_bytes"])
+    model_fl = cell.get("model_flops_per_device", 0.0)
+    t_compute = model_fl / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_collective = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    frac = model_fl / flops_hlo if flops_hlo else 0.0
+    # ideal step time: compute at peak OR the unavoidable per-step streaming
+    # (weights once; + the KV/state cache once for decode), whichever binds.
+    ideal = max(t_compute, cell.get("min_bytes_per_device", 0.0) / HBM_BW)
+    return {**terms, "dominant": dom,
+            "hlo_flops_est": flops_hlo,
+            "useful_flop_fraction": frac,
+            "ideal_s": ideal,
+            "roofline_fraction": ideal / max(max(terms.values()), 1e-30)}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the whole step (all devices)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def _lower_cell(cfg, shape, mesh, rules):
+    """Build + lower + compile one cell; returns (compiled, t_lower, t_comp)."""
+    t0 = time.time()
+    with mesh_context(mesh, rules):
+        pstructs, pspecs = sp.param_structs(cfg, mesh, rules)
+        batch = sp.input_specs(cfg, shape, mesh, rules)
+        if shape.kind == "train":
+            tc = TrainConfig(remat=True)
+            step = make_train_step(cfg, tc)
+            ostructs = sp.opt_structs(pspecs, mesh, rules, tc.opt)
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            lowered = fn.lower(pstructs, ostructs, batch)
+        elif shape.kind == "prefill":
+            cache = sp.cache_structs(cfg, shape, mesh, rules)
+            fn = jax.jit(
+                lambda p, c, b: tfm.prefill(p, cfg, c, b),
+                donate_argnums=(1,))
+            lowered = fn.lower(pstructs, cache, batch)
+        else:  # decode
+            cache = sp.cache_structs(cfg, shape, mesh, rules)
+            fn = jax.jit(
+                lambda p, c, t: tfm.serve_step(p, cfg, c, t),
+                donate_argnums=(1,))
+            lowered = fn.lower(pstructs, cache, batch["tokens"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, lowered, t_lower, t_compile
+
+
+def _measure(compiled, lowered) -> dict:
+    ca = compiled.cost_analysis() or {}
+    if not ca.get("flops"):
+        ca = dict(ca, **(lowered.cost_analysis() or {}))
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": ca.get("flops", 0.0) or 0.0,
+            "bytes": ca.get("bytes accessed", 0.0) or 0.0,
+            "collectives": coll}
+
+
+def _probe_layers(cfg) -> tuple[int, int, int, int]:
+    """(L1, L2, unit, n_units) for the two-point extrapolation."""
+    unit = cfg.attn_every if cfg.family == "hybrid" else 1
+    base = cfg.first_dense_layers
+    L1, L2 = base + unit, base + 2 * unit
+    n_units = (cfg.num_layers - base) // unit
+    return L1, L2, unit, n_units
+
+
+def probe_roofline(cfg, shape, mesh, rules) -> dict:
+    """Two-point unrolled probe: per-layer-unit exact HLO counts, scaled to
+    the full depth.  Collective counts are exact (all collectives sit at
+    layer granularity); compute-only inner scans (attention tiles, wkv/ssd
+    chunks) stay rolled and are noted as a flop-counter diagnostic."""
+    import dataclasses
+    L1, L2, unit, n_units = _probe_layers(cfg)
+    out = {"L1": L1, "L2": L2, "n_units": n_units}
+    metrics = []
+    for L in (L1, L2):
+        c = dataclasses.replace(cfg, num_layers=L, scan_unroll=True)
+        compiled, lowered, _, t = _lower_cell(c, shape, mesh, rules)
+        metrics.append(_measure(compiled, lowered))
+        out[f"probe_compile_s_L{L}"] = round(t, 2)
+    m1, m2 = metrics
+    for key in ("flops", "bytes"):
+        per = m2[key] - m1[key]
+        fixed = m1[key] - per
+        out[f"{key}_per_unit"] = per
+        out[f"{key}_fixed"] = fixed
+        out[f"{key}_est"] = fixed + per * n_units
+    per_c = m2["collectives"]["total_bytes"] - m1["collectives"]["total_bytes"]
+    fixed_c = m1["collectives"]["total_bytes"] - per_c
+    out["collective_bytes_per_unit"] = per_c
+    out["collective_bytes_fixed"] = fixed_c
+    out["collective_bytes_est"] = fixed_c + per_c * n_units
+    out["collective_kind_bytes_est"] = {
+        k: (m1["collectives"]["bytes"][k]
+            + (m2["collectives"]["bytes"][k]
+               - m1["collectives"]["bytes"][k]) * (n_units - 1))
+        for k in m1["collectives"]["bytes"]}
+    return out
+
+
+def use_serving_layout(cfg, shape) -> bool:
+    """Weights-stationary serving layout pays when the per-token weight
+    gather would dominate: batched decode, or models whose weights cannot
+    replicate across the data axis anyway (experts > ~8 GB/model-shard).
+    For single-stream decode of small models, the trainer layout's
+    2D-sharded weights + partial-psum contractions already win (measured:
+    rwkv6/zamba2 long_500k) — real serving stacks make exactly this
+    layout choice per deployment."""
+    if shape.kind != "decode":
+        return False
+    weight_gb_per_shard = cfg.param_count() * 2 / 16 / 2**30
+    return shape.global_batch >= 16 or weight_gb_per_shard > 8
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = True, probe: bool = None,
+             tag: str = "", serving_rules: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "tag": tag, "status": "skipped", "reason": why}
+    if not ok:
+        _write(path, cell)
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(mesh, kind=shape.kind
+                      if serving_rules and use_serving_layout(cfg, shape)
+                      else "train")
+    cell["num_devices"] = mesh.devices.size
+    if probe is None:
+        probe = not multi_pod  # roofline table is single-pod per the spec
+    try:
+        compiled, lowered, t_lower, t_compile = _lower_cell(
+            cfg, shape, mesh, rules)
+        ca = compiled.cost_analysis() or {}
+        if not ca.get("flops"):
+            ca = dict(ca, **(lowered.cost_analysis() or {}))
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            mem_d[field] = getattr(mem, field, None)
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        mf = model_flops(cfg, shape)
+        # unavoidable per-device streaming: weights once per step (active
+        # experts only for MoE decode; all experts train fwd+bwd), plus the
+        # cache for decode steps
+        dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+        if shape.kind == "decode":
+            wb = cfg.active_param_count() * dtype_bytes
+        else:
+            wb = cfg.param_count() * dtype_bytes
+        min_bytes = wb / mesh.devices.size
+        if shape.kind == "decode":
+            cache_spec = tfm.abstract_cache(cfg, shape.global_batch,
+                                            shape.seq_len)
+            import numpy as _np
+            from repro.parallel.sharding import ParamSpec as _PS
+            cache_bytes = sum(
+                _np.prod(s.shape) * (2 if s.dtype == "bfloat16" else 4)
+                for s in jax.tree.leaves(
+                    cache_spec, is_leaf=lambda x: isinstance(x, _PS))
+                if isinstance(s, _PS))
+            min_bytes += cache_bytes / mesh.devices.size
+        cell.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "cost_analysis": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed",
+                               "transcendentals") if k in ca},
+            "memory_analysis": mem_d,
+            "collectives": coll,
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / mesh.devices.size,
+            "min_bytes_per_device": min_bytes,
+            "hlo_instruction_count": hlo.count("\n"),
+        })
+        del compiled, lowered, hlo
+        if probe:
+            cell["probe"] = probe_roofline(cfg, shape, mesh, rules)
+        cell["roofline"] = roofline(cell)
+    except Exception as e:  # record the failure, keep sweeping
+        cell.update({"status": "error", "error": repr(e),
+                     "traceback": traceback.format_exc()[-3000:]})
+    _write(path, cell)
+    return cell
+
+
+def _write(path, cell):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    ap.add_argument("--serving-rules", action="store_true",
+                    help="weights-stationary layout for decode cells")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                t0 = time.time()
+                cell = run_cell(arch, shape, mp, args.out,
+                                skip_existing=not args.force,
+                                tag=args.tag,
+                                serving_rules=args.serving_rules)
+                dt = time.time() - t0
+                status = cell["status"]
+                extra = ""
+                if status == "ok":
+                    r = cell["roofline"]
+                    extra = (f" dom={r['dominant']} "
+                             f"rf={r['roofline_fraction']:.3f}")
+                elif status == "error":
+                    extra = " " + cell["error"][:120]
+                print(f"[{status:7s}] {arch:22s} {shape:12s} "
+                      f"{'pod2' if mp else 'pod1'} ({dt:5.1f}s){extra}",
+                      flush=True)
+                results.append(cell)
+    n_ok = sum(c["status"] == "ok" for c in results)
+    n_err = sum(c["status"] == "error" for c in results)
+    n_skip = sum(c["status"] == "skipped" for c in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

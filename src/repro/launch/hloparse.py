@@ -1,0 +1,56 @@
+"""HLO-text parsing helpers for the dry-run (importable WITHOUT
+touching jax device state — dryrun.py sets XLA_FLAGS at import)."""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one HLO shape literal like 'bf16[2,4096,8192]{2,1,0}'."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, per kind.
+
+    Matches lines like:
+      %ag = bf16[2,512]{1,0} all-gather(...), replica_groups=...
+      %ar = (f32[8]{0}, f32[4]{0}) all-reduce(...)
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(\(?[a-z0-9]+\[[0-9,]*\][^)\s]*\)?[^=]*?)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    shape_pat = re.compile(r"[a-z0-9]+\[[0-9,]*\]")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        kinds = m.group(2)
+        shapes = shape_pat.findall(m.group(1))
+        nbytes = sum(_shape_bytes(s) for s in shapes)
+        out[kinds] += nbytes
+        counts[kinds] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+

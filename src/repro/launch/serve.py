@@ -1,0 +1,50 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Prefill + batched greedy decode with the ring-buffer KV cache.  On a real
+pod this runs with the weights-stationary DECODE_RULES layout (see
+launch/mesh.rules_for(kind="decode")); in this container it serves the
+reduced configs on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+
+    cfg = get_config(args.arch).reduced()
+    params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (B, P), 0, cfg.vocab_size, jnp.int32)
+    cache = tfm.init_cache(cfg, B, tfm.cache_slots(cfg, P + G))
+    t0 = time.perf_counter()
+    _, cache = tfm.prefill(params, cfg, cache, {"tokens": prompts})
+    print(f"prefill {B}x{P}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+    step = jax.jit(lambda p, c, t: tfm.serve_step(p, cfg, c, t))
+    tok = prompts[:, -1:]
+    t0 = time.perf_counter()
+    for _ in range(G):
+        nxt, cache = step(params, cache, tok)
+        tok = nxt[:, None]
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"decode {B}x{G}: {dt*1e3:.0f} ms ({B*G/dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

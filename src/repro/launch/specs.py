@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run feeds
+these to .lower(); nothing is allocated.  Sharded per the active rules with
+the same divisibility-drop logic the runtime constraints use."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.parallel.sharding import (AxisRules, ParamSpec, clean_spec,
+                                     tree_structs)
+
+
+def struct(shape, dtype, logical_axes, mesh, rules):
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, clean_spec(shape, logical_axes, mesh,
+                                                rules)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """Batch stand-ins for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": struct((B, 1), jnp.int32, ("batch", None),
+                                  mesh, rules)}
+        return batch
+    if cfg.frontend == "vision":
+        s_text = S - cfg.num_patches
+        return {
+            "tokens": struct((B, s_text), jnp.int32, ("batch", "seq"),
+                             mesh, rules),
+            "patches": struct((B, cfg.num_patches,
+                               tfm.FRONTEND_DIM["vision"]), jnp.float32,
+                              ("batch", None, None), mesh, rules),
+        }
+    if cfg.frontend == "audio":
+        return {
+            "tokens": struct((B, S), jnp.int32, ("batch", "seq"),
+                             mesh, rules),
+            "frames": struct((B, S, tfm.FRONTEND_DIM["audio"]), jnp.float32,
+                             ("batch", "seq", None), mesh, rules),
+        }
+    return {"tokens": struct((B, S), jnp.int32, ("batch", "seq"),
+                             mesh, rules)}
+
+
+def param_structs(cfg: ModelConfig, mesh, rules):
+    specs = tfm.abstract_params(cfg, moe_shards=mesh.shape["model"])
+    return tree_structs(specs, mesh, rules), specs
+
+
+def opt_structs(param_specs, mesh, rules, oc: adamw.OptConfig):
+    """OptState stand-ins: master/mu/nu share the parameter shardings."""
+    def f32(s: ParamSpec):
+        return ParamSpec(s.shape, s.axes, "float32", s.init, s.scale)
+    is_ps = lambda x: isinstance(x, ParamSpec)
+    master = tree_structs(jax.tree.map(f32, param_specs, is_leaf=is_ps),
+                          mesh, rules)
+    mu = tree_structs(jax.tree.map(f32, param_specs, is_leaf=is_ps),
+                      mesh, rules)
+    nu = tree_structs(jax.tree.map(f32, param_specs, is_leaf=is_ps),
+                      mesh, rules)
+    ef = master if oc.compress_grads else None
+    return adamw.OptState(
+        jax.ShapeDtypeStruct((), jnp.int32,
+                             sharding=NamedSharding(mesh, P())),
+        master, mu, nu, ef)
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    spec = tfm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return tree_structs(spec, mesh, rules)

@@ -1,0 +1,53 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs the production training loop on the available devices.  On a real pod
+this binary runs per host under the cluster scheduler (auto-resume makes
+restarts free); in this container it runs the reduced/100M variants on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--size", choices=["reduced", "100m", "full"],
+                    default="reduced")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.optim.adamw import OptConfig
+    from repro.runtime.trainer import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.size == "reduced":
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, vocab_size=max(cfg.vocab_size, 512))
+    elif args.size == "100m":
+        from examples.train_lm import scale_to_100m
+        cfg = scale_to_100m(cfg)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M")
+
+    tc = TrainConfig(
+        steps=args.steps, batch=args.batch, seq_len=args.seq,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches, log_every=10,
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps,
+                      compress_grads=args.compress_grads))
+    _, _, hist = train(cfg, tc)
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

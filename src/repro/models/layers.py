@@ -1,0 +1,212 @@
+"""Shared LM building blocks: RMSNorm, RoPE, GQA attention, MLP variants.
+
+Attention is *blockwise* (two-level scan with online softmax — the XLA-level
+flash pattern) so train/prefill memory is O(S·block) not O(S^2); the Pallas
+flash kernel (kernels/flash_attention) is the TPU-optimized drop-in for the
+same math.  All matmuls accumulate in fp32 (``preferred_element_type``);
+norms run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import gathered, lsc
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blockwise causal attention (train / prefill).
+# --------------------------------------------------------------------------
+
+def _attn_block(q, k, v, qpos, kpos, window):
+    """One (q-block, kv-block) tile.  q: (B, qb, Hkv, G, hd);
+    k/v: (B, kb, Hkv, hd).  Returns (scores_max, exp_sum, acc) pieces."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = kpos[None, :] <= qpos[:, None]  # causal
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s
+
+
+def blockwise_attention(q, k, v, positions, window: int = 0,
+                        q_block: int = 512, kv_block: int = 512):
+    """Causal (optionally windowed) attention, memory O(S·block).
+
+    q: (B, S, H, hd); k, v: (B, S, Hkv, hd); positions: (S,).
+    Two-level scan: outer over q blocks, inner over kv blocks, carrying the
+    online-softmax (m, l, acc) triple — the flash-attention recurrence.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    nq, nk = S // q_block, S // kv_block
+    assert S % q_block == 0 and S % kv_block == 0
+
+    qg = q.reshape(B, nq, q_block, Hkv, G, hd).swapaxes(0, 1)
+    kg = k.reshape(B, nk, kv_block, Hkv, hd).swapaxes(0, 1)
+    vg = v.reshape(B, nk, kv_block, Hkv, hd).swapaxes(0, 1)
+    pg = positions.reshape(nq, q_block)
+
+    def outer(_, qi_and_pos):
+        qi, qpos, iq = qi_and_pos
+
+        def inner(carry, ki_vi_pos):
+            m, l, acc = carry
+            ki, vi, kpos, ik = ki_vi_pos
+            s = _attn_block(qi, ki, vi, qpos, kpos, window)
+            # skip tiles strictly above the diagonal (saves nothing in FLOPs
+            # under scan, but keeps the math exact for any block shape)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                            vi.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (kg, vg, positions.reshape(nk, kv_block),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Hkv, G, qb, hd) -> (B, qb, H, hd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_block, H, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(outer, None, (qg, pg, jnp.arange(nq)))
+    # (nq, B, q_block, H, hd) -> (B, S, H, hd)
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position,
+                     window: int = 0):
+    """Single-token attention against a (ring-buffered) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, C, Hkv, hd); cache_positions: (B, C) actual
+    sequence positions held in each slot (-1 = empty).  The cache slot axis C
+    is sequence-sharded over the model axis (flash-decode): each device scans
+    only its slice, and the (m, l, acc) softmax merge happens in fp32 via the
+    psums XLA inserts — the Dalorex move: the cache (data) never moves, the
+    query (task) visits it.
+    """
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (cache_positions >= 0) & (cache_positions <= q_position[:, None])
+    if window:
+        mask &= cache_positions > q_position[:, None] - window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, v_cache.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants.
+# --------------------------------------------------------------------------
+
+def _h_constraint(h, decode: bool):
+    """Hidden-state constraint: train/prefill keep the sequence sharded
+    (weights gathered, ZeRO-TP); decode keeps ff sharded so the w_down
+    contraction SLICES the resident weight and psums the tiny partial,
+    instead of gathering the weight per generated token."""
+    if decode:
+        return lsc(h, "batch", None, "mlp")
+    return lsc(h, "batch", "seq", None)
+
+
+def mlp_apply(params, x, kind: str):
+    """x: (..., d).  Weights are laid out (d, ff) / (ff, d).
+
+    TRAIN/PREFILL (many tokens/device): weights are pre-gathered in bf16
+    behind an optimization barrier (§Perf iter A3) — seq-local compute with
+    weight-gathering beats activation gathers, and the barrier stops the
+    SPMD partitioner from all-gathering the fp32-upcast copy instead.
+    DECODE (one token): weights stay sharded-resident (model-TP,
+    DECODE_RULES); gathering them per generated token is the pathology
+    §Perf iter 1 removed."""
+    decode = x.shape[-2] == 1
+
+    def gw(w):
+        return w if decode else gathered(w, None, None)
+
+    w_up = gw(params["w_up"])
+    w_down = gw(params["w_down"])
+    if kind == "swiglu":
+        w_gate = gw(params["w_gate"])
+        g = jnp.einsum("...d,df->...f", x, w_gate,
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("...d,df->...f", x, w_up,
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+        h = _h_constraint(h, decode)
+    elif kind == "squared_relu":
+        u = jnp.einsum("...d,df->...f", x, w_up,
+                       preferred_element_type=jnp.float32)
+        h = jnp.square(jax.nn.relu(u)).astype(x.dtype)
+        h = _h_constraint(h, decode)
+    elif kind == "gelu":
+        u = jnp.einsum("...d,df->...f", x, w_up,
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(u).astype(x.dtype)
+        h = _h_constraint(h, decode)
+    else:
+        raise ValueError(kind)
+    out = jnp.einsum("...f,fd->...d", h, w_down,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mlp_specs(d: int, ff: int, kind: str, dtype: str):
+    from repro.parallel.sharding import ParamSpec
+    if kind == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, ff), ("fsdp", "mlp"), dtype),
+            "w_up": ParamSpec((d, ff), ("fsdp", "mlp"), dtype),
+            "w_down": ParamSpec((ff, d), ("mlp", "fsdp"), dtype),
+        }
+    return {
+        "w_up": ParamSpec((d, ff), ("fsdp", "mlp"), dtype),
+        "w_down": ParamSpec((ff, d), ("mlp", "fsdp"), dtype),
+    }

@@ -1,0 +1,98 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid.
+
+The selective-state recurrence lives in kernels/mamba2 (ref oracle, chunked
+jnp, Pallas TPU kernel).  O(1) decode state (H, P, N) per layer — the hybrid
+runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2 import ops as ssd_ops
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import ParamSpec, lsc
+
+CONV_K = 4
+
+
+def mamba_block_specs(d: int, expand: int, head_dim: int, N: int, dtype: str):
+    din = expand * d
+    H = din // head_dim
+    proj_out = 2 * din + 2 * N + H  # z, x, B, C, dt
+    return {
+        "norm": ParamSpec((d,), (None,), "float32", init="ones"),
+        "in_proj": ParamSpec((d, proj_out), ("fsdp", "heads"), dtype),
+        "conv_w": ParamSpec((CONV_K, din + 2 * N), (None, None), "float32"),
+        "conv_b": ParamSpec((din + 2 * N,), (None,), "float32", init="zeros"),
+        "a_log": ParamSpec((H,), (None,), "float32", init="zeros"),
+        "d_skip": ParamSpec((H,), (None,), "float32", init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), "float32", init="zeros"),
+        "norm_g": ParamSpec((din,), (None,), "float32", init="ones"),
+        "out_proj": ParamSpec((din, d), ("heads", "fsdp"), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, kernel CONV_K.  x: (B, S, C)."""
+    pad = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(CONV_K))
+    return out + b[None, None]
+
+
+def _conv_step(conv_state, xt, w, b):
+    """conv_state: (B, CONV_K-1, C) previous inputs; xt: (B, C)."""
+    full = jnp.concatenate([conv_state, xt[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", full, w) + b[None]
+    return full[:, 1:], out
+
+
+def mamba_block(p, x, state, cfg, use_pallas: bool):
+    """x: (B, S, d).  state = (conv (B,K-1,C), ssd (B,H,P,N)) or None."""
+    B, S, d = x.shape
+    din = cfg.ssm_expand * d
+    P_, N = cfg.ssm_head_dim, cfg.ssm_state
+    H = din // P_
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+
+    if state is None or S > 1:
+        # train / prefill: full causal conv over the sequence; the carry-out
+        # conv state is the last K-1 raw inputs, the SSD state falls out of
+        # the chunked recurrence below
+        if state is None:
+            ssd_state = jnp.zeros((B, H, P_, N), jnp.float32)
+        else:
+            _, ssd_state = state
+        raw = xbc
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        tail = jnp.zeros((B, CONV_K - 1, din + 2 * N), x.dtype)
+        take = min(S, CONV_K - 1)
+        conv_state = tail.at[:, CONV_K - 1 - take:].set(
+            raw[:, S - take:].astype(x.dtype))
+    else:
+        conv_state, ssd_state = state
+        conv_state, xbc1 = _conv_step(conv_state, xbc[:, 0], p["conv_w"],
+                                      p["conv_b"])
+        xbc = xbc1[:, None]
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    xh = xs.reshape(B, S, H, P_).astype(jnp.float32)
+    y, ssd_state = ssd_ops.ssd(
+        xh, dt, p["a_log"], Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        state0=ssd_state, use_pallas=use_pallas)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, din)
+    # gated RMSNorm (mamba2)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm_g"], cfg.norm_eps)
+    if S == 1:  # decode: keep din sharded -> slice the resident out_proj
+        y = lsc(y, "batch", None, "heads")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32)
+    return x + out.astype(x.dtype), (conv_state, ssd_state)

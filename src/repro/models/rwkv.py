@@ -1,0 +1,131 @@
+"""RWKV6 "Finch" blocks: time-mix (WKV with data-dependent decay) +
+channel-mix.  Attention-free: O(1) decode state per layer — this family runs
+the long_500k shape.
+
+Weights follow the Finch structure: static token-shift lerps per projection,
+a LoRA producing the per-channel data-dependent decay ``w_t``, and the
+per-channel bonus ``u``.  The recurrence itself lives in
+kernels/rwkv6 (ref.py oracle, chunked jnp, Pallas TPU kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ops as wkv_ops
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import ParamSpec, gathered, lsc
+
+W_LORA_RANK = 32
+
+
+def rwkv_block_specs(d: int, ff: int, head_dim: int, dtype: str):
+    H = d // head_dim
+    return {
+        "ln1": ParamSpec((d,), (None,), "float32", init="ones"),
+        "ln2": ParamSpec((d,), (None,), "float32", init="ones"),
+        # time-mix
+        "mu": ParamSpec((5, d), (None, None), "float32", init="zeros"),
+        "w_r": ParamSpec((d, d), ("fsdp", "heads"), dtype),
+        "w_k": ParamSpec((d, d), ("fsdp", "heads"), dtype),
+        "w_v": ParamSpec((d, d), ("fsdp", "heads"), dtype),
+        "w_g": ParamSpec((d, d), ("fsdp", "heads"), dtype),
+        "w_o": ParamSpec((d, d), ("heads", "fsdp"), dtype),
+        "w0": ParamSpec((d,), (None,), "float32", init="zeros"),
+        "w_lora_a": ParamSpec((d, W_LORA_RANK), (None, None), "float32"),
+        "w_lora_b": ParamSpec((W_LORA_RANK, d), (None, None), "float32",
+                              init="zeros"),
+        "u": ParamSpec((H, head_dim), (None, None), "float32", init="zeros"),
+        "ln_x": ParamSpec((d,), (None,), "float32", init="ones"),
+        # channel-mix
+        "mu_c": ParamSpec((2, d), (None, None), "float32", init="zeros"),
+        "w_ck": ParamSpec((d, ff), ("fsdp", "mlp"), dtype),
+        "w_cv": ParamSpec((ff, d), ("mlp", "fsdp"), dtype),
+        "w_cr": ParamSpec((d, d), ("fsdp", None), dtype),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} (last: (B, d) carry for the first position)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(p, x, last_x, wkv_state, head_dim: int, use_pallas: bool):
+    B, S, d = x.shape
+    H = d // head_dim
+    xs = _shift(x, last_x)
+    mu = p["mu"].astype(x.dtype)
+    lerp = x[None] + (xs - x)[None] * mu[:, None, None]  # (5, B, S, d)
+    lr, lk, lv, lw, lg = lerp
+
+    train = S > 1
+    gw = (lambda w: gathered(w, None, None)) if train else (lambda w: w)
+    r = jnp.einsum("bsd,de->bse", lr, gw(p["w_r"]),
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,de->bse", lk, gw(p["w_k"]),
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,de->bse", lv, gw(p["w_v"]),
+                   preferred_element_type=jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", lg, gw(p["w_g"]),
+                               preferred_element_type=jnp.float32))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    lora = jnp.einsum("bsd,dr,re->bse", lw.astype(jnp.float32),
+                      p["w_lora_a"], p["w_lora_b"])
+    w_log = -jnp.exp(p["w0"][None, None] + jnp.tanh(lora))
+    # clip so chunk-local cumulated decays stay in fp32 exp range (a decay
+    # below e^-4 per step is indistinguishable from 0 within 2-3 steps)
+    w_log = jnp.clip(w_log, -4.0, -1e-6)
+
+    shape4 = (B, S, H, head_dim)
+    y, wkv_state = wkv_ops.wkv6(
+        r.reshape(shape4), k.reshape(shape4), v.reshape(shape4),
+        w_log.reshape(shape4), p["u"], state0=wkv_state,
+        use_pallas=use_pallas)
+    y = y.reshape(B, S, d)
+    # per-head group norm
+    yh = y.reshape(B, S, H, head_dim)
+    yh = yh * jax.lax.rsqrt(
+        jnp.mean(jnp.square(yh), axis=-1, keepdims=True) + 1e-5)
+    y = yh.reshape(B, S, d) * p["ln_x"][None, None]
+    out = jnp.einsum("bsd,de->bse", (y * g).astype(x.dtype), gw(p["w_o"]),
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), x[:, -1], wkv_state
+
+
+def _channel_mix(p, x, last_x):
+    xs = _shift(x, last_x)
+    mu = p["mu_c"].astype(x.dtype)
+    lk = x + (xs - x) * mu[0][None, None]
+    lr = x + (xs - x) * mu[1][None, None]
+    train = x.shape[1] > 1
+    gw = (lambda w: gathered(w, None, None)) if train else (lambda w: w)
+    kk = jnp.einsum("bsd,df->bsf", lk, gw(p["w_ck"]),
+                    preferred_element_type=jnp.float32)
+    kk = jnp.square(jax.nn.relu(kk)).astype(x.dtype)
+    from repro.models.layers import _h_constraint
+    kk = _h_constraint(kk, decode=x.shape[1] == 1)
+    vv = jnp.einsum("bsf,fd->bsd", kk, gw(p["w_cv"]),
+                    preferred_element_type=jnp.float32)
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", lr, gw(p["w_cr"]),
+                                   preferred_element_type=jnp.float32))
+    return (rr * vv).astype(x.dtype), x[:, -1]
+
+
+def rwkv_block(p, x, state, head_dim: int, eps: float, use_pallas: bool):
+    """x: (B, S, d).  state = (last_tm (B,d), last_cm (B,d),
+    wkv (B,H,K,K)) or None (training: zero init, discard)."""
+    B, S, d = x.shape
+    H = d // head_dim
+    if state is None:
+        last_tm = jnp.zeros((B, d), x.dtype)
+        last_cm = jnp.zeros((B, d), x.dtype)
+        wkv = jnp.zeros((B, H, head_dim, head_dim), jnp.float32)
+    else:
+        last_tm, last_cm, wkv = state
+    h = rms_norm(x, p["ln1"], eps)
+    att, last_tm, wkv = _time_mix(p, h, last_tm, wkv, head_dim, use_pallas)
+    x = x + att
+    h = rms_norm(x, p["ln2"], eps)
+    cm, last_cm = _channel_mix(p, h, last_cm)
+    x = x + cm
+    return x, (last_tm, last_cm, wkv)

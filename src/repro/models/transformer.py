@@ -1,0 +1,579 @@
+"""Model builder: every assigned architecture family from one config.
+
+Families
+  dense / vlm / audio — pre-norm GQA transformer (vlm/audio prepend/add a
+      stub-frontend projection per the assignment).
+  moe      — dense attention + Dalorex-routed expert FFN (core/moe.py);
+             optional leading dense layers (moonlight).
+  ssm      — RWKV6 stack (attention-free).
+  hybrid   — zamba2: super-blocks of [shared attention + k Mamba2 layers];
+             the attention block's WEIGHTS are shared across super-blocks
+             (Zamba's trick), each application has its own KV cache slot.
+
+Layer stacks are ``lax.scan``-ned (O(1) HLO size at 88 layers), bodies are
+``jax.checkpoint``-ed for remat.  Decode uses ring-buffered KV caches
+(slot = pos mod C) sequence-sharded over the model axis — flash-decode with
+the Dalorex flavor: cache data never moves, the query visits it.
+
+Embedding uses the routed vocab-sharded lookup (core/embedding.py) when the
+config enables the technique; the LM head computes the loss against
+vocab-sharded logits in sequence chunks, so full logits are never
+materialized.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.embedding import embed_lookup, padded_vocab
+from repro.core.moe import moe_block, moe_param_specs
+from repro.models.layers import (blockwise_attention, decode_attention,
+                                 mlp_apply, mlp_specs, rms_norm, rope)
+from repro.models.mamba import CONV_K, mamba_block, mamba_block_specs
+from repro.models.rwkv import rwkv_block, rwkv_block_specs
+from repro.parallel.sharding import ParamSpec, current_mesh, gathered, lsc
+
+FRONTEND_DIM = {"vision": 1024, "audio": 128}
+
+
+# --------------------------------------------------------------------------
+# Parameter specs.
+# --------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig):
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "ln": ParamSpec((d,), (None,), "float32", init="ones"),
+        "wq": ParamSpec((d, H, hd), ("fsdp", "heads", None), cfg.dtype),
+        "wk": ParamSpec((d, Hkv, hd), ("fsdp", "kv_heads", None), cfg.dtype),
+        "wv": ParamSpec((d, Hkv, hd), ("fsdp", "kv_heads", None), cfg.dtype),
+        "wo": ParamSpec((H, hd, d), ("heads", None, "fsdp"), cfg.dtype),
+    }
+
+
+def _dense_block_specs(cfg: ModelConfig):
+    s = {"attn": _attn_specs(cfg),
+         "ln2": ParamSpec((cfg.d_model,), (None,), "float32", init="ones"),
+         "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, cfg.dtype)}
+    return s
+
+
+def _moe_block_specs(cfg: ModelConfig, M: int):
+    s = {"attn": _attn_specs(cfg),
+         "ln2": ParamSpec((cfg.d_model,), (None,), "float32", init="ones"),
+         "moe": moe_param_specs(cfg.d_model, cfg.d_ff, cfg.num_experts, M,
+                                cfg.mlp, cfg.dtype)}
+    return s
+
+
+def _stack(specs, n: int):
+    """Add a leading scanned-layer axis to every leaf spec."""
+    def one(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, (None,) + s.axes, s.dtype,
+                         s.init, s.scale)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_mesh_size(model_axis: str = "model") -> int:
+    mesh = current_mesh()
+    return mesh.shape[model_axis] if mesh is not None else 1
+
+
+def abstract_params(cfg: ModelConfig, moe_shards: int | None = None):
+    """ParamSpec tree for the whole model (dry-run lowers this directly)."""
+    d = cfg.d_model
+    M = moe_shards if moe_shards is not None else model_mesh_size()
+    v_pad = padded_vocab(cfg.vocab_size, max(M, 1))
+    vocab_axis = "vocab" if cfg.routed_embedding else None
+    p = {
+        "embed": ParamSpec((v_pad, d), (vocab_axis, None), cfg.dtype,
+                           init="embed", scale=0.02),
+        "final_norm": ParamSpec((d,), (None,), "float32", init="ones"),
+        "lm_head": ParamSpec((d, v_pad), ("fsdp", "vocab"), cfg.dtype),
+    }
+    if cfg.frontend in FRONTEND_DIM:
+        p["frontend_proj"] = ParamSpec(
+            (FRONTEND_DIM[cfg.frontend], d), (None, "fsdp"), cfg.dtype)
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        p["blocks"] = _stack(
+            rwkv_block_specs(d, cfg.d_ff, cfg.rwkv_head_dim, cfg.dtype), L)
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        assert L % k == 0, (L, k)
+        p["shared_attn"] = {
+            **_attn_specs(cfg),
+            "ln2": ParamSpec((d,), (None,), "float32", init="ones"),
+            "mlp": mlp_specs(d, cfg.d_ff, cfg.mlp, cfg.dtype),
+        }
+        p["blocks"] = _stack(_stack(
+            mamba_block_specs(d, cfg.ssm_expand, cfg.ssm_head_dim,
+                              cfg.ssm_state, cfg.dtype), k), L // k)
+    elif cfg.family == "moe":
+        fd = cfg.first_dense_layers
+        if fd:
+            p["first_blocks"] = _stack(_dense_block_specs(cfg), fd)
+        p["blocks"] = _stack(_moe_block_specs(cfg, max(M, 1)), L - fd)
+    else:  # dense / vlm / audio
+        p["blocks"] = _stack(_dense_block_specs(cfg), L)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    from repro.parallel.sharding import init_tree
+    return init_tree(key, abstract_params(cfg))
+
+
+# --------------------------------------------------------------------------
+# Decode cache.
+# --------------------------------------------------------------------------
+
+class Cache(NamedTuple):
+    pos: jax.Array                 # () int32 — tokens decoded so far
+    attn_k: jax.Array | None       # (n_attn, B, C, Hkv, hd)
+    attn_v: jax.Array | None
+    rwkv: tuple | None             # (last_tm, last_cm, wkv) leading (L, B,..)
+    mamba: tuple | None            # (conv, ssd) leading (L//k, k, B, ...)
+
+
+def cache_slots(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """ParamSpec tree for the decode cache (dry-run input)."""
+    d, Hkv, hd = cfg.d_model, cfg.num_kv_heads, cfg.hd
+    C = cache_slots(cfg, seq_len)
+    L = cfg.num_layers
+    pos = ParamSpec((), (), "int32", init="zeros")
+    attn_k = attn_v = rwkv = mamba = None
+    kv_axes = (None, "batch", "kv_seq", None, None)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        attn_k = ParamSpec((L, batch, C, Hkv, hd), kv_axes, cfg.dtype,
+                           init="zeros")
+        attn_v = ParamSpec((L, batch, C, Hkv, hd), kv_axes, cfg.dtype,
+                           init="zeros")
+    elif cfg.family == "ssm":
+        H = d // cfg.rwkv_head_dim
+        K = cfg.rwkv_head_dim
+        rwkv = (
+            ParamSpec((L, batch, d), (None, "batch", None), cfg.dtype,
+                      init="zeros"),
+            ParamSpec((L, batch, d), (None, "batch", None), cfg.dtype,
+                      init="zeros"),
+            ParamSpec((L, batch, H, K, K),
+                      (None, "batch", "heads", None, None), "float32",
+                      init="zeros"),
+        )
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        n_sb = L // k
+        attn_k = ParamSpec((n_sb, batch, C, Hkv, hd), kv_axes, cfg.dtype,
+                           init="zeros")
+        attn_v = ParamSpec((n_sb, batch, C, Hkv, hd), kv_axes, cfg.dtype,
+                           init="zeros")
+        din = cfg.ssm_expand * d
+        H = din // cfg.ssm_head_dim
+        mamba = (
+            ParamSpec((n_sb, k, batch, CONV_K - 1, din + 2 * cfg.ssm_state),
+                      (None, None, "batch", None, None), cfg.dtype,
+                      init="zeros"),
+            ParamSpec((n_sb, k, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                      (None, None, "batch", "heads", None, None), "float32",
+                      init="zeros"),
+        )
+    return Cache(pos, attn_k, attn_v, rwkv, mamba)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    from repro.parallel.sharding import init_tree
+    spec = abstract_cache(cfg, batch, seq_len)
+    return init_tree(jax.random.PRNGKey(0), spec)
+
+
+def _slot_positions(pos, C: int):
+    """Sequence position stored in each ring slot (-1 = empty)."""
+    i = jnp.arange(C, dtype=jnp.int32)
+    cand = pos - 1 - ((pos - 1 - i) % C)
+    return jnp.where(cand >= 0, cand, -1)
+
+
+# --------------------------------------------------------------------------
+# Attention block (shared by dense / moe / vlm / audio / zamba-shared).
+# --------------------------------------------------------------------------
+
+def _use_ring(cfg: ModelConfig, S: int, kv_cache) -> bool:
+    """Context-parallel (ring) attention for train AND prefill on a mesh
+    whose model axis divides the sequence (the attention compute is
+    cache-independent; prefill's cache write happens from kk/vv upstream).
+    Decode (S==1) keeps the flash-decode cache layout."""
+    if S == 1 or not cfg.context_parallel or not cfg.num_heads:
+        return False
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    M = mesh.shape["model"]
+    return S % M == 0 and S >= M and M > 1
+
+
+def _attn_apply(p, x, cfg: ModelConfig, kv_cache, pos):
+    """x: (B, S, d).  kv_cache: None (train) or (k, v) ring buffers.
+
+    Returns (out (B,S,d), new_kv or None)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    # (§Perf train iter A, REFUTED: pre-gathering the sequence for Megatron
+    # -SP style TP costs more than weight-gathering at 65k tokens/device —
+    # see EXPERIMENTS.md.  The projections run on the seq-sharded stream.)
+    ring = _use_ring(cfg, S, kv_cache)
+    if ring:
+        # context parallelism: weights fully gathered in bf16 (barrier pins
+        # the collective below the fp32 convert), sequence stays sharded
+        wq = gathered(p["wq"], None, None, None)
+        wk = gathered(p["wk"], None, None, None)
+        wv = gathered(p["wv"], None, None, None)
+    else:
+        wq, wk, wv = p["wq"], p["wk"], p["wv"]
+    q = jnp.einsum("bsd,dhk->bshk", h, wq,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    kk = jnp.einsum("bsd,dhk->bshk", h, wk,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    vv = jnp.einsum("bsd,dhk->bshk", h, wv,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+
+    if kv_cache is None or S > 1:  # train / prefill
+        positions = jnp.arange(S, dtype=jnp.int32)
+        q = rope(q, positions, cfg.rope_theta)
+        kk = rope(kk, positions, cfg.rope_theta)
+        if ring:
+            from repro.parallel.ring import ring_attention
+            q = lsc(q, "batch", "seq", None, None)
+            kk = lsc(kk, "batch", "seq", None, None)
+            vv = lsc(vv, "batch", "seq", None, None)
+            att = ring_attention(q, kk, vv, mesh=current_mesh(),
+                                 batch_axes=_batch_axes(),
+                                 window=cfg.sliding_window)
+        else:
+            q = lsc(q, "batch", None, "heads", None)
+            # gather seq on the small Hkv tensors FIRST (cheap), then
+            # repeat to H heads locally (reference path; grouped on the TPU
+            # kernel) — the repeat is free under a heads-sharded layout
+            kk = lsc(kk, "batch", None, "kv_heads", None)
+            vv = lsc(vv, "batch", None, "kv_heads", None)
+            rep = kk.shape[2]
+            kf = jnp.repeat(kk, H // rep, axis=2)
+            vf = jnp.repeat(vv, H // rep, axis=2)
+            kf = lsc(kf, "batch", None, "heads", None)
+            vf = lsc(vf, "batch", None, "heads", None)
+            att = blockwise_attention(q, kf, vf, positions,
+                                      window=cfg.sliding_window)
+        new_kv = None
+        if kv_cache is not None:  # prefill into the ring cache
+            ck, cv = kv_cache
+            C = ck.shape[1]
+            take = min(S, C)
+            slots = (jnp.arange(take, dtype=jnp.int32) + (S - take)) % C
+            new_kv = (
+                ck.at[:, slots].set(kk[:, S - take:].astype(ck.dtype)),
+                cv.at[:, slots].set(vv[:, S - take:].astype(cv.dtype)),
+            )
+    else:  # decode: one token against the ring cache
+        qpos = jnp.full((B,), pos, jnp.int32)
+        q = rope(q, qpos[:, None], cfg.rope_theta)
+        kk = rope(kk, qpos[:, None], cfg.rope_theta)
+        ck, cv = kv_cache
+        C = ck.shape[1]
+        slot = pos % C
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        ck = lsc(ck, "batch", "kv_seq", None, None)
+        cv = lsc(cv, "batch", "kv_seq", None, None)
+        cpos = jnp.broadcast_to(_slot_positions(pos + 1, C)[None], (B, C))
+        att = decode_attention(q, ck, cv, cpos, qpos,
+                               window=cfg.sliding_window)
+        new_kv = (ck, cv)
+
+    out = jnp.einsum("bshk,hkd->bsd", att, p["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_kv
+
+
+def _dense_block(p, x, cfg, kv_cache, pos):
+    att, new_kv = _attn_apply(p["attn"], x, cfg, kv_cache, pos)
+    x = x + att
+    x = lsc(x, "batch", "seq", None)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(p["mlp"], h, cfg.mlp)
+    x = lsc(x, "batch", "seq", None)
+    return x, new_kv, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)
+
+
+def _moe_block_apply(p, x, cfg, kv_cache, pos, seq_shard, batch_axes):
+    att, new_kv = _attn_apply(p["attn"], x, cfg, kv_cache, pos)
+    x = x + att
+    x = lsc(x, "batch", "seq", None)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux, ovf = moe_block(
+        p["moe"], h, E=cfg.num_experts, k=cfg.experts_per_tok,
+        ff=cfg.d_ff, mlp=cfg.mlp, batch_axes=batch_axes,
+        seq_shard=seq_shard, capacity_factor=cfg.moe_capacity_factor)
+    x = x + y
+    x = lsc(x, "batch", "seq", None)
+    return x, new_kv, aux, ovf
+
+
+# --------------------------------------------------------------------------
+# Forward.
+# --------------------------------------------------------------------------
+
+def _batch_axes():
+    mesh = current_mesh()
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, cache: Cache = None,
+            remat: bool = True, use_pallas: bool = False):
+    """Returns (hidden (B,S,d), new_cache, aux dict).
+
+    batch: {"tokens": (B,S)} (+ "patches" for vlm, "frames" for audio).
+    cache=None -> training/scoring; cache -> decode/prefill serving.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    d = cfg.d_model
+    decoding = cache is not None and S == 1
+    batch_axes = _batch_axes()
+    seq_shard = not decoding
+
+    emb, ovf_embed = embed_lookup(
+        params["embed"], tokens, cfg.routed_embedding,
+        batch_axes=batch_axes, seq_shard=seq_shard)
+    x = emb
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(x.dtype),
+                        params["frontend_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    elif cfg.frontend == "audio" and "frames" in batch:
+        fe = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(x.dtype),
+                        params["frontend_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + fe
+    x = lsc(x, "batch", "seq", None)
+
+    pos = cache.pos if cache is not None else jnp.zeros((), jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    ovf_total = ovf_embed
+    new_cache = cache
+
+    def ckpt(fn):
+        return jax.checkpoint(fn) if remat else fn
+
+    if cfg.family == "ssm":
+        def body(x, layer):
+            p_l, st = layer
+            x, st = rwkv_block(p_l, x, st, cfg.rwkv_head_dim, cfg.norm_eps,
+                               use_pallas)
+            return x, st
+        states = cache.rwkv if cache is not None else None
+        if states is None:
+            L = cfg.num_layers
+            H = d // cfg.rwkv_head_dim
+            K = cfg.rwkv_head_dim
+            states = (jnp.zeros((L, B, d), x.dtype),
+                      jnp.zeros((L, B, d), x.dtype),
+                      jnp.zeros((L, B, H, K, K), jnp.float32))
+        x, new_states = jax.lax.scan(ckpt(body), x,
+                                     (params["blocks"], states),
+                                     unroll=cfg.scan_unroll)
+        if cache is not None:
+            new_cache = cache._replace(rwkv=new_states,
+                                       pos=cache.pos + S)
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+
+        def shared_attn(x, kv):
+            att, new_kv = _attn_apply(params["shared_attn"], x, cfg, kv, pos)
+            x = x + att
+            h = rms_norm(x, params["shared_attn"]["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(params["shared_attn"]["mlp"], h, cfg.mlp)
+            return lsc(x, "batch", "seq", None), new_kv
+
+        if cache is not None:
+            def superblock(x, layer):
+                p_sb, kv, mst = layer
+                x, new_kv = shared_attn(x, kv)
+
+                def inner(x, lyr):
+                    p_l, st = lyr
+                    x, st = mamba_block(p_l, x, st, cfg, use_pallas)
+                    return x, st
+                x, new_mst = jax.lax.scan(inner, x, (p_sb, mst),
+                                          unroll=cfg.scan_unroll)
+                return x, (new_kv, new_mst)
+            x, (new_kv, new_mst) = jax.lax.scan(
+                ckpt(superblock), x,
+                (params["blocks"], (cache.attn_k, cache.attn_v),
+                 cache.mamba), unroll=cfg.scan_unroll)
+            new_cache = cache._replace(attn_k=new_kv[0], attn_v=new_kv[1],
+                                       mamba=new_mst, pos=cache.pos + S)
+        else:
+            def superblock(x, p_sb):
+                x, _ = shared_attn(x, None)
+
+                def inner(x, p_l):
+                    x, _ = mamba_block(p_l, x, None, cfg, use_pallas)
+                    return x, None
+                x, _ = jax.lax.scan(inner, x, p_sb,
+                                    unroll=cfg.scan_unroll)
+                return x, None
+            x, _ = jax.lax.scan(ckpt(superblock), x, params["blocks"],
+                                unroll=cfg.scan_unroll)
+    else:  # dense / vlm / audio / moe
+        is_moe = cfg.family == "moe"
+        fd = cfg.first_dense_layers if is_moe else 0
+
+        def run_stage(x, stage_params, kv, moe_stage):
+            """kv=None: training (no cache ever built).  kv=(k,v): serving."""
+            def apply_block(p_l, x, kv_l):
+                if moe_stage:
+                    return _moe_block_apply(p_l, x, cfg, kv_l, pos,
+                                            seq_shard, batch_axes)
+                return _dense_block(p_l, x, cfg, kv_l, pos)
+
+            if kv is None:
+                def body(carry, p_l):
+                    x, aux, ovf = carry
+                    x, _, a, o = apply_block(p_l, x, None)
+                    return (x, aux + a, ovf + o), None
+                (x, aux, ovf), _ = jax.lax.scan(
+                    ckpt(body), (x, jnp.zeros((), jnp.float32),
+                                 jnp.zeros((), jnp.int32)), stage_params,
+                    unroll=cfg.scan_unroll)
+                return x, aux, ovf, None
+
+            def body(carry, layer):
+                x, aux, ovf = carry
+                p_l, kv_l = layer
+                x, new_kv, a, o = apply_block(p_l, x, kv_l)
+                return (x, aux + a, ovf + o), new_kv
+            (x, aux, ovf), new_kv = jax.lax.scan(
+                ckpt(body), (x, jnp.zeros((), jnp.float32),
+                             jnp.zeros((), jnp.int32)), (stage_params, kv),
+                unroll=cfg.scan_unroll)
+            return x, aux, ovf, new_kv
+
+        kv_all = None if cache is None else (cache.attn_k, cache.attn_v)
+        nk_parts = []
+        if fd:
+            kv0 = None if kv_all is None else tuple(a[:fd] for a in kv_all)
+            x, a0, o0, nkv0 = run_stage(x, params["first_blocks"], kv0,
+                                        False)
+            aux_total += a0
+            ovf_total += o0
+            nk_parts.append(nkv0)
+        kv1 = None if kv_all is None else tuple(a[fd:] for a in kv_all)
+        x, a1, o1, nkv1 = run_stage(x, params["blocks"], kv1, is_moe)
+        aux_total += a1
+        ovf_total += o1
+        nk_parts.append(nkv1)
+        if cache is not None:
+            nk = jnp.concatenate([p[0] for p in nk_parts], axis=0) \
+                if len(nk_parts) > 1 else nk_parts[0][0]
+            nv = jnp.concatenate([p[1] for p in nk_parts], axis=0) \
+                if len(nk_parts) > 1 else nk_parts[0][1]
+            new_cache = cache._replace(attn_k=nk, attn_v=nv,
+                                       pos=cache.pos + S)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = lsc(x, "batch", "seq", None)
+    return x, new_cache, {"moe_aux": aux_total, "overflow": ovf_total}
+
+
+# --------------------------------------------------------------------------
+# Loss (chunked, vocab-sharded logits) and serving step.
+# --------------------------------------------------------------------------
+
+def chunked_xent(x, w_head, labels, mask, chunk: int = 512,
+                 z_loss: float = 1e-4, unroll: bool = False):
+    """Cross entropy against vocab-sharded logits, computed in sequence
+    chunks so the full (B,S,V) logits tensor never exists.
+
+    x: (B,S,d); w_head: (d, V_pad); labels: (B,S) int32; mask: (B,S)."""
+    B, S, d = x.shape
+    V = w_head.shape[1]
+    chunk = min(chunk, S)
+    n = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+    xs = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, zt = carry
+        xc, lc, mc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, w_head,
+                            preferred_element_type=jnp.float32)
+        logits = lsc(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, V, dtype=logits.dtype)
+        picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        nll = (lse - picked) * mc
+        zl = jnp.square(lse) * mc
+        return (tot + nll.sum(), zt + zl.sum()), None
+
+    (tot, zt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls, ms), unroll=unroll)
+    denom = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+    return tot / denom + z_loss * zt / denom
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict, *, remat: bool = True,
+            use_pallas: bool = False, aux_weight: float = 1e-2):
+    """Causal LM loss; returns (loss, metrics)."""
+    x, _, aux = forward(params, cfg, batch, cache=None, remat=remat,
+                        use_pallas=use_pallas)
+    tokens = batch["tokens"]
+    B, S_tok = tokens.shape
+    S_total = x.shape[1]
+    n_front = S_total - S_tok  # vlm: prepended patch positions
+    # predict token t+1 at position n_front + t
+    hx = x[:, n_front:-1] if S_tok > 1 else x[:, n_front:]
+    labels = tokens[:, 1:]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = chunked_xent(hx, params["lm_head"], jnp.maximum(labels, 0), mask,
+                        unroll=cfg.scan_unroll)
+    total = loss + aux_weight * aux["moe_aux"]
+    return total, {"xent": loss, "moe_aux": aux["moe_aux"],
+                   "overflow": aux["overflow"]}
+
+
+def serve_step(params, cfg: ModelConfig, cache: Cache, tokens):
+    """One decode step for the whole batch.  tokens: (B, 1) int32.
+    Returns (next_token (B,), new_cache)."""
+    x, new_cache, _ = forward(params, cfg, {"tokens": tokens}, cache=cache,
+                              remat=False)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    logits = lsc(logits, "batch", None, "vocab")
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return nxt, new_cache
+
+
+def prefill(params, cfg: ModelConfig, cache: Cache, batch: dict):
+    """Fill the cache with a prompt; returns (last-position hidden, cache)."""
+    x, new_cache, _ = forward(params, cfg, batch, cache=cache, remat=False)
+    return x[:, -1], new_cache

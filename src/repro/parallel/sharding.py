@@ -1,0 +1,273 @@
+"""Logical-axis sharding: one rule table maps model-space axis names to mesh
+axes (MaxText-style), so every architecture shares a single parallelism
+vocabulary:
+
+  batch   -> data (+ pod)     pure data parallelism
+  fsdp    -> data             ZeRO-3 parameter/optimizer sharding
+  seq     -> model            sequence parallelism between blocks
+  heads   -> model            tensor parallelism (attention heads)
+  mlp     -> model            tensor parallelism (hidden dim)
+  expert  -> model            expert parallelism (Dalorex-routed dispatch)
+  vocab   -> model            vocab-sharded embedding / LM head
+  kv_seq  -> model            decode: sequence-sharded KV cache
+                              (flash-decode; the Dalorex move — cache stays,
+                              query visits)
+  stage   -> pod              pipeline stages (optional)
+
+Rules are plain data; the dry-run and tests swap them per mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> mesh axis name (or tuple of names, or None)."""
+
+    table: tuple[tuple[str, object], ...]
+
+    def get(self, name: str | None):
+        if name is None:
+            return None
+        for k, v in self.table:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, logical_axes: tuple[str | None, ...]) -> P:
+        mesh_axes = [self.get(a) for a in logical_axes]
+        # A mesh axis may appear at most once in a PartitionSpec.
+        seen = set()
+        out = []
+        for m in mesh_axes:
+            ms = m if isinstance(m, tuple) else (m,) if m else ()
+            keep = tuple(x for x in ms if x not in seen)
+            seen.update(keep)
+            out.append(keep if len(keep) != 1 else keep[0])
+        out = [o if o != () else None for o in out]
+        return P(*out)
+
+
+SINGLE_POD_RULES = AxisRules((
+    ("batch", ("data",)),
+    ("fsdp", "data"),
+    ("seq", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+    ("kv_seq", "model"),
+    ("stage", None),
+))
+
+MULTI_POD_RULES = AxisRules((
+    ("batch", ("pod", "data")),
+    ("fsdp", "data"),
+    ("seq", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+    # decode caches shard their slot axis across pods too (32-way for the
+    # 500k single-stream cell, where batch cannot shard)
+    ("kv_seq", ("pod", "model")),
+    ("stage", None),
+))
+
+PIPELINE_RULES = MULTI_POD_RULES  # with ("stage", "pod") override via replace
+
+# Decode (serving) rules — §Perf iteration 1.  Training FSDP re-gathers
+# weights every step; amortized over 1M train tokens that is cheap, but a
+# decode step touches every weight for ONE token per sequence, so the
+# gather dominates (mixtral decode_32k baseline: 703 ms collective vs
+# 0.2 ms compute).  Serving keeps weights STATIONARY:
+#   * fsdp -> None: dense/attention weights replicated over `data`
+#     (resident; the model axis still shards them 16-way);
+#   * expert_ff -> data: the big MoE expert weights get their ff dimension
+#     sharded over `data` (2D: slots over model x ff over data), so
+#     mixtral's 277 GB of experts still fits and is NEVER moved — every
+#     data-row computes its ff-slice of every dispatched token and the
+#     slice partials psum (Dalorex: the weight is the immovable data).
+DECODE_RULES = AxisRules((
+    ("batch", ("data",)),
+    ("fsdp", None),
+    ("expert_ff", "data"),
+    ("seq", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+    ("kv_seq", "model"),
+    ("stage", None),
+))
+
+DECODE_RULES_MULTI = AxisRules((
+    ("batch", ("pod", "data")),
+    ("fsdp", None),
+    ("expert_ff", "data"),
+    ("seq", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+    ("kv_seq", ("pod", "model")),
+    ("stage", None),
+))
+
+
+def with_rule(rules: AxisRules, name: str, value) -> AxisRules:
+    return AxisRules(tuple((k, value if k == name else v)
+                           for k, v in rules.table))
+
+
+# --------------------------------------------------------------------------
+# Thread-local context: active (mesh, rules) used by logical constraints.
+# --------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    mesh: Mesh | None = None
+    rules: AxisRules | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: AxisRules | None):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> AxisRules | None:
+    return _CTX.rules
+
+
+def clean_spec(shape, logical_axes, mesh, rules: "AxisRules") -> P:
+    """PartitionSpec for ``shape``, dropping axes whose dimension is not
+    divisible by the assigned mesh axes (e.g. kv_heads=8 over model=16, or a
+    "seq" constraint on a decode step's length-1 axis)."""
+    spec = rules.spec(logical_axes)
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    cleaned = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            cleaned.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        cleaned.append(entry if dim % size == 0 and dim >= size else None)
+    return P(*cleaned)
+
+
+def lsc(x, *logical_axes):
+    """Logical sharding constraint: no-op outside a mesh context, so the same
+    model code runs single-device (tests) and fully sharded (dry-run/train).
+    """
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = clean_spec(x.shape, logical_axes, _CTX.mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def gathered(w, *logical_axes):
+    """Pre-gather a tensor in ITS OWN dtype and pin it with an optimization
+    barrier, so the SPMD partitioner cannot hoist the fp32 compute-precision
+    convert above the collective (halves weight all-gather bytes — §Perf
+    train iteration A3).  No-op outside a mesh context."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return w
+    w = lsc(w, *logical_axes)
+    return jax.lax.optimization_barrier(w)
+
+
+def sharding_for(logical_axes: tuple[str | None, ...]):
+    """NamedSharding for the active mesh (None outside a context)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return None
+    return NamedSharding(_CTX.mesh, _CTX.rules.spec(logical_axes))
+
+
+# --------------------------------------------------------------------------
+# Parameter specs: shape + dtype + logical axes, materialized lazily.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: str = "float32"
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def sharded_struct(self, mesh, rules) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(
+            self.shape, self.dtype,
+            sharding=NamedSharding(
+                mesh, clean_spec(self.shape, self.axes, mesh, rules)))
+
+
+def materialize(key, spec: ParamSpec):
+    import jax.numpy as jnp
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    if spec.init == "embed":
+        std = spec.scale
+    else:
+        std = spec.scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, spec.shape, "float32") * std
+            ).astype(spec.dtype)
+
+
+def init_tree(key, specs):
+    """Materialize a pytree of ParamSpec with per-leaf folded keys."""
+    import jax.numpy as jnp  # noqa: F401
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_structs(specs, mesh=None, rules=None):
+    """ShapeDtypeStructs (optionally sharded) for a ParamSpec tree — this is
+    what the dry-run feeds to .lower(); no memory is allocated."""
+    def one(s: ParamSpec):
+        if mesh is not None and rules is not None:
+            return s.sharded_struct(mesh, rules)
+        return s.struct()
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shardings(specs, mesh, rules):
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, clean_spec(s.shape, s.axes, mesh, rules))
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,170 @@
+"""Production training loop: auto-resume, atomic checkpoints, straggler
+monitoring, optional gradient accumulation + compressed DP all-reduce.
+
+Fault-tolerance model (maps to a real pod deployment):
+  * crash/preemption -> restart re-enters `train()`; `latest_valid_step`
+    finds the newest intact checkpoint; the seekable data pipeline resumes
+    bit-identically at that step (tested by killing mid-run in
+    tests/test_runtime.py);
+  * elastic re-scale  -> checkpoints are logical arrays; restore re-shards
+    onto whatever mesh the restarted job has;
+  * stragglers        -> per-step wall time feeds an EWMA; steps slower than
+    ``straggler_factor``x the EWMA are flagged (on a real pod the flag
+    triggers the re-mesh/elastic path; here it is logged + counted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_source
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.parallel.collectives import compress_tree
+from repro.parallel.sharding import (current_mesh, current_rules,
+                                     tree_shardings)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 64
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    data: str = "markov"
+    seed: int = 0
+    microbatches: int = 1        # gradient accumulation
+    remat: bool = True
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    opt: adamw.OptConfig = adamw.OptConfig()
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Builds the jitted (params, opt_state, batch) -> ... step function."""
+    oc = tc.opt
+
+    def loss_fn(params, batch):
+        loss, metrics = tfm.lm_loss(params, cfg, batch, remat=tc.remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        if tc.microbatches > 1:
+            B = tokens.shape[0]
+            mb = B // tc.microbatches
+            mbatches = {k: v.reshape((tc.microbatches, mb) + v.shape[1:])
+                        for k, v in batch.items()}
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), mbatches)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, gsum)
+            loss = lsum / tc.microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        # force grads onto the parameter shardings (reduce-scatter over the
+        # fsdp axis instead of a full all-reduce — §Perf train iteration A)
+        mesh, rules = current_mesh(), current_rules()
+        if mesh is not None and rules is not None:
+            shardings = tree_shardings(tfm.abstract_params(cfg), mesh, rules)
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, shardings)
+
+        if oc.compress_grads:
+            grads, ef = compress_tree(grads, opt_state.ef, axis=None)
+            opt_state = opt_state._replace(ef=ef)
+
+        params, opt_state, om = adamw.apply_updates(params, opt_state,
+                                                    grads, oc)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    alpha: float = 0.2
+    ewma: float | None = None
+    flags: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.factor * self.ewma
+        if slow:
+            self.flags += 1
+        else:  # stragglers do not poison the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, mesh=None, stop_after=None):
+    """Run (or resume) training.  Returns (params, opt_state, history)."""
+    source = make_source(tc.data, cfg.vocab_size, tc.seq_len, tc.batch,
+                         tc.seed)
+    start = store.latest_valid_step(tc.ckpt_dir)
+    if start is None:
+        params = tfm.init_params(jax.random.PRNGKey(tc.seed), cfg)
+        opt_state = adamw.init(params, tc.opt)
+        start = 0
+    else:
+        template = jax.eval_shape(lambda: (lambda p: {
+            "params": p, "opt": adamw.init(p, tc.opt)})(
+                tfm.init_params(jax.random.PRNGKey(tc.seed), cfg)))
+        restored = store.restore(tc.ckpt_dir, start, template)
+        params = jax.tree.map(jnp.asarray, restored["params"])
+        opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+
+    # donate buffers only when params are stored in a reduced dtype (bf16
+    # production path); fp32 params alias the fp32 master after one step.
+    donate = (0, 1) if cfg.dtype != "float32" else ()
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=donate)
+    monitor = StragglerMonitor(tc.straggler_factor)
+    history = []
+
+    for step in range(start, tc.steps):
+        batch = {"tokens": jnp.asarray(source.batch_at(step))}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = monitor.observe(dt)
+        history.append({"step": step, "loss": loss, "dt": dt,
+                        "straggler": slow})
+        if tc.log_every and step % tc.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"dt {dt*1e3:.0f}ms{'  [STRAGGLER]' if slow else ''}")
+        done = step + 1
+        if done % tc.ckpt_every == 0 or done == tc.steps:
+            store.save(tc.ckpt_dir, done,
+                       {"params": params, "opt": opt_state},
+                       extra={"arch": cfg.name}, keep=tc.ckpt_keep)
+        if stop_after is not None and done - start >= stop_after:
+            break
+    return params, opt_state, history

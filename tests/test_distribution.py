@@ -1,0 +1,72 @@
+"""Property tests for placement/distribution invariants + dry-run helpers."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distribution import DistSpec, placement, padded_len
+from repro.launch.hloparse import collective_bytes, _shape_bytes
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 16), st.sampled_from(
+    ["low_order", "high_order"]))
+def test_placement_is_bijection(n, shards, scheme):
+    place, inv = placement(n, shards, scheme)
+    n_pad = padded_len(n, shards)
+    assert len(place) == n
+    assert len(inv) == n_pad
+    # every original id maps to a unique slot, and inv inverts place
+    assert len(set(place.tolist())) == n
+    for v in range(min(n, 50)):
+        assert inv[place[v]] == v
+    # padding slots marked -1
+    assert (inv == -1).sum() == n_pad - n
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 64))
+def test_distspec_owner_local_roundtrip(shards, chunk):
+    spec = DistSpec(shards * chunk, shards)
+    idx = np.arange(spec.total)
+    owner = spec.owner(idx)
+    local = spec.local(idx)
+    assert (owner == idx // chunk).all()
+    assert (spec.global_(owner, local) == idx).all()
+    assert (local < chunk).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 100))
+def test_low_order_scatters_consecutive_ids(shards, base):
+    """Consecutive (hot) vertex ids land on different shards — the paper's
+    balance property for degree-sorted graphs."""
+    n = shards * 8
+    place, _ = placement(n, shards, "low_order")
+    spec = DistSpec(padded_len(n, shards), shards)
+    owners = spec.owner(place[: shards])
+    assert len(set(np.asarray(owners).tolist())) == shards
+
+
+def test_hlo_shape_bytes():
+    assert _shape_bytes("bf16[2,4096,8192]{2,1,0}") == 2 * 4096 * 8192 * 2
+    assert _shape_bytes("f32[8]{0}") == 32
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[2,512]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[16,4]{1,0} all-to-all(%z)
+  %cp = bf16[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not = f32[9]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["bytes"]["all-gather"] == 2 * 512 * 2
+    assert out["bytes"]["all-reduce"] == 32 + 16
+    assert out["bytes"]["reduce-scatter"] == 256
+    assert out["bytes"]["all-to-all"] == 256
+    assert out["bytes"]["collective-permute"] == 8
+    assert out["counts"]["all-gather"] == 1
+    assert out["total_bytes"] == sum(out["bytes"].values())

@@ -1,0 +1,108 @@
+"""Engine correctness vs sequential numpy oracles (paper Section IV-B)."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=128, cap_updq=2048,
+                max_rounds=5000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def make_graph(scale=8, seed=0, ef=6):
+    n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=seed)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return make_graph()
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return alg.prepare(g, T=4)
+
+
+def pick_root(g):
+    deg = g.ptr[1:] - g.ptr[:-1]
+    return int(np.argmax(deg))
+
+
+def test_bfs_matches_reference(g, pg):
+    root = pick_root(g)
+    res = alg.bfs(pg, root, small_cfg())
+    expect = ref.bfs_ref(g, root)
+    np.testing.assert_array_equal(res.values, expect)
+    assert int(res.stats.drops) == 0
+
+
+def test_sssp_matches_reference(g, pg):
+    root = pick_root(g)
+    res = alg.sssp(pg, root, small_cfg())
+    expect = ref.sssp_ref(g, root)
+    finite = np.isfinite(expect)
+    assert (np.isfinite(res.values) == finite).all()
+    np.testing.assert_allclose(res.values[finite], expect[finite], rtol=1e-5)
+    assert int(res.stats.drops) == 0
+
+
+def test_wcc_matches_reference(g):
+    gs = alg.symmetrize(g)
+    pg = alg.prepare(gs, T=4)
+    res = alg.wcc(pg, small_cfg())
+    expect = ref.wcc_ref(gs)
+    np.testing.assert_array_equal(res.values, expect)
+
+
+def test_spmv_matches_reference(g, pg):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=g.num_vertices).astype(np.float32)
+    res = alg.spmv(pg, x, small_cfg())
+    expect = ref.spmv_ref(g, x.astype(np.float64))
+    np.testing.assert_allclose(res.values, expect, rtol=2e-4, atol=1e-4)
+
+
+def test_pagerank_matches_reference(g, pg):
+    res = alg.pagerank(pg, iters=8, cfg=small_cfg())
+    expect = ref.pagerank_ref(g, iters=8)
+    np.testing.assert_allclose(res.values, expect, rtol=2e-3, atol=1e-7)
+
+
+def test_bsp_mode_matches_and_needs_more_rounds(g, pg):
+    root = pick_root(g)
+    res_async = alg.bfs(pg, root, small_cfg(mode="async"))
+    res_bsp = alg.bfs(pg, root, small_cfg(mode="bsp"))
+    np.testing.assert_array_equal(res_async.values, res_bsp.values)
+    # removing the barrier should never be slower (paper Fig. 5 last rung)
+    assert int(res_async.stats.rounds) <= int(res_bsp.stats.rounds)
+    assert int(res_bsp.stats.epochs) >= 1
+
+
+def test_static_policy_correct_but_spillier(g, pg):
+    root = pick_root(g)
+    res_t = alg.bfs(pg, root, small_cfg(policy="traffic"))
+    res_s = alg.bfs(pg, root, small_cfg(policy="static"))
+    np.testing.assert_array_equal(res_t.values, res_s.values)
+    assert int(res_s.stats.drops) == 0
+
+
+def test_high_order_placement_correct(g):
+    pg2 = alg.prepare(g, T=4, scheme="high_order")
+    root = pick_root(g)
+    res = alg.bfs(pg2, root, small_cfg())
+    np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))
+
+
+def test_vertex_aligned_edges_correct(g):
+    pg3 = alg.prepare(g, T=4, edge_mode="vertex_aligned")
+    root = pick_root(g)
+    res = alg.bfs(pg3, root, small_cfg())
+    np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))

@@ -1,0 +1,77 @@
+"""Loss-path equivalence and capacity-limit telemetry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.moe import moe_block
+from repro.models.transformer import chunked_xent
+from repro.core.engine import EngineConfig
+
+
+def naive_xent(x, w, labels, mask, z_loss=1e-4):
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = ((lse - picked) * mask).sum()
+    zl = (jnp.square(lse) * mask).sum()
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll / denom + z_loss * zl / denom
+
+
+@pytest.mark.parametrize("B,S,d,V,chunk", [(2, 64, 16, 50, 16),
+                                           (1, 33, 8, 20, 16),  # ragged
+                                           (3, 128, 32, 100, 512)])
+def test_chunked_xent_matches_naive(B, S, d, V, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    x = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, V)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V, jnp.int32)
+    mask = (jnp.arange(S)[None] < S - 3).astype(jnp.float32) * jnp.ones((B, 1))
+    got = chunked_xent(x, w, labels, mask, chunk=chunk)
+    expect = naive_xent(x, w, labels, mask)
+    np.testing.assert_allclose(float(got), float(expect), rtol=1e-5)
+
+
+def test_moe_overflow_counter_fires():
+    """Starved capacity must be COUNTED (the TSU telemetry), never silent."""
+    E, k, d, ff, B, S = 4, 2, 16, 32, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {
+        "router": jax.random.normal(ks[0], (d, E)) * 0.1,
+        "w_gate": jax.random.normal(ks[1], (E, d, ff)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (E, d, ff)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (E, ff, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[4], (B, S, d))
+    _, _, ovf_tight = moe_block(params, x, E=E, k=k, ff=ff, mlp="swiglu",
+                                capacity_factor=0.25)
+    _, _, ovf_loose = moe_block(params, x, E=E, k=k, ff=ff, mlp="swiglu",
+                                capacity_factor=8.0)
+    assert int(ovf_loose) == 0
+    assert int(ovf_tight) > 0
+
+
+def test_engine_config_validate_rejects_undersized_queue():
+    cfg = EngineConfig(cap_updq=64)
+    with pytest.raises(AssertionError, match="worst-case T2 burst"):
+        cfg.validate(16)
+
+
+def test_lm_loss_ignores_negative_labels():
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              num_layers=2)
+    from repro.models import transformer as tfm
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size, jnp.int32)
+    loss_full, _ = tfm.lm_loss(params, cfg, {"tokens": toks}, remat=False)
+    # mask the second half of the labels
+    masked = toks.at[:, 8:].set(-1)
+    loss_masked, _ = tfm.lm_loss(params, cfg, {"tokens": masked},
+                                 remat=False)
+    assert np.isfinite(float(loss_masked))
+    assert abs(float(loss_masked) - float(loss_full)) > 1e-6

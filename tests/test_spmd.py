@@ -1,0 +1,65 @@
+"""SPMD (shard_map) path == LocalComm emulation, bit for bit.
+
+Multi-device CPU tests must force XLA_FLAGS *before* jax initializes, so
+they run in a subprocess; the in-process suite keeps seeing 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import algorithms as alg
+    from repro.core import reference as ref
+    from repro.core.engine import EngineConfig
+    from repro.core.graph import CSRGraph, rmat_edges
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("x",))
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    g = CSRGraph.from_edges(n, src, dst, val)
+    pg = alg.prepare(g, T=8)
+    cfg = EngineConfig(f_pop=8, r_pop=8, u_pop=16, max_t2=8,
+                       cap_route_range=8, cap_route_update=32,
+                       cap_rangeq=128, cap_updq=4096, max_rounds=5000)
+    deg = g.ptr[1:] - g.ptr[:-1]
+    root = int(np.argmax(deg))
+
+    # BFS: SPMD == Local == oracle
+    r_spmd = alg.bfs(pg, root, cfg, mesh=mesh)
+    r_local = alg.bfs(pg, root, cfg)
+    np.testing.assert_array_equal(r_spmd.values, r_local.values)
+    np.testing.assert_array_equal(r_spmd.values, ref.bfs_ref(g, root))
+    assert int(r_spmd.stats.drops) == 0
+    # identical round/message counts: the two backends are the same machine
+    assert int(r_spmd.stats.rounds) == int(r_local.stats.rounds)
+    assert int(r_spmd.stats.msgs_update) == int(r_local.stats.msgs_update)
+
+    # SSSP
+    s_spmd = alg.sssp(pg, root, cfg, mesh=mesh)
+    s_local = alg.sssp(pg, root, cfg)
+    np.testing.assert_array_equal(s_spmd.values, s_local.values)
+
+    # SpMV
+    x = np.random.default_rng(0).normal(size=n).astype(np.float32)
+    y_spmd = alg.spmv(pg, x, cfg, mesh=mesh)
+    np.testing.assert_allclose(y_spmd.values, ref.spmv_ref(g, x), rtol=2e-4,
+                               atol=1e-4)
+    print("SPMD-OK")
+""")
+
+
+@pytest.mark.slow
+def test_spmd_matches_local_and_oracle():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SPMD-OK" in out.stdout
