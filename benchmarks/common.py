@@ -17,9 +17,11 @@ def engine_cfg(T: int = 16, **kw):
     # full T2 burst (no-drop invariant), which grows with the grid size.
     base = dict(f_pop=32, r_pop=32, u_pop=64, max_t2=16,
                 cap_route_range=8, cap_route_update=32,
-                cap_rangeq=512, max_rounds=200_000)
+                max_rounds=200_000)
     base.update(kw)
-    burst = T * base["cap_route_range"] * base["max_t2"] + base["u_pop"]
+    # size the queues from the engine's own worst-case inflow bounds
+    rangeq, burst = EngineConfig(**base).min_caps(T)
+    base.setdefault("cap_rangeq", max(512, 1 << (rangeq - 1).bit_length()))
     base.setdefault("cap_updq", max(8192, 1 << (burst - 1).bit_length()))
     return EngineConfig(**base)
 
@@ -47,4 +49,14 @@ def timed(fn, *args, repeat: int = 1, **kw):
 
 
 def stats_row(stats) -> dict:
-    return {k: int(getattr(stats, k)) for k in stats._fields}
+    """Flatten Stats for CSV-ish rows: scalars as ints, telemetry arrays
+    (flits_per_link, hop_histogram) summarized as max/sum."""
+    out = {}
+    for k in stats._fields:
+        v = np.asarray(getattr(stats, k))
+        if v.ndim == 0:
+            out[k] = int(v)
+        else:
+            out[f"{k}_max"] = int(v.max())
+            out[f"{k}_sum"] = int(v.sum())
+    return out

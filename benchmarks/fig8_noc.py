@@ -1,18 +1,28 @@
-"""Paper Fig. 8/9: NoC traffic balance under the two placements.
+"""Paper Fig. 8/9: NoC traffic balance — placements AND fabric topologies.
 
 The mesh-center hotspot in Fig. 9 is *caused* by skewed per-destination
 traffic; the torus/ruche rungs fix the fabric, uniform placement fixes the
-source.  We measure the cause directly: the per-destination message
-histogram of the first BFS wavefronts under low-order vs high-order
-placement (max/mean = endpoint contention; the paper's heatmap in numbers).
-Physical torus-vs-mesh wiring cannot be re-measured functionally — the ICI
-fabric is fixed; documented in DESIGN.md.
+source.  Two measurement families:
+
+* placement rows (`fig8*`): per-destination message histogram under
+  low-order vs high-order placement (max/mean = endpoint contention; the
+  paper's heatmap in numbers), plus a dynamic BFS confirmation.
+* topology rows (`fig8-topo*`): the physical wiring is now re-measured
+  functionally via the pluggable :mod:`repro.noc` subsystem — BFS runs
+  over mesh / torus / ruche backends with dimension-ordered routing, and
+  the per-link telemetry exposes the mesh-center hotspot directly
+  (``max_link_occupancy``, interior-vs-boundary column load) and how
+  torus wraparound / ruche express channels flatten it (paper Fig. 9).
+  An earlier revision claimed torus-vs-mesh "cannot be re-measured
+  functionally"; that held only while the fabric was a single ideal
+  all_to_all — see DESIGN.md ("NoC subsystem").
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import algorithms as alg
+from repro.noc import LOCAL_BWD, LOCAL_FWD, N_CHANNELS, grid_shape
 from benchmarks.common import engine_cfg, pick_root, rmat_graph
 
 
@@ -52,6 +62,54 @@ def _static_rows(g, T, tag):
     return rows
 
 
+def _col_load(flits: np.ndarray, rows: int, cols: int) -> np.ndarray:
+    """Per-column local-link load of the X block (east+west), (cols,)."""
+    xb = flits[:N_CHANNELS * rows * cols].reshape(rows, N_CHANNELS, cols)
+    return (xb[:, LOCAL_FWD] + xb[:, LOCAL_BWD]).sum(axis=0)
+
+
+def _topology_rows(g, T: int) -> list[dict]:
+    """The torus-vs-mesh-vs-ruche rungs, measured on the live fabric."""
+    root = pick_root(g)
+    pg = alg.prepare(g, T)
+    rows_, cols = grid_shape(T)
+    out = []
+    for noc in ("ideal", "mesh", "torus", "ruche"):
+        # uncapped links: telemetry records the *offered* load per link, so
+        # the wiring's hotspot structure is visible (paper Fig. 9 heatmap)
+        res = alg.bfs(pg, root, engine_cfg(T=T, noc=noc, link_cap=0))
+        s = res.stats
+        flits = np.asarray(s.flits_per_link)
+        hist = np.asarray(s.hop_histogram)
+        used = flits[flits > 0]
+        row = {
+            "bench": "fig8-topo", "noc": noc,
+            "rounds": int(s.rounds),
+            "max_link_occupancy": int(s.max_link_occupancy),
+            "link_max_over_mean": round(flits.max() / max(used.mean(), 1e-9),
+                                        3),
+            "avg_hops": round(float((hist * np.arange(len(hist))).sum()
+                                    / max(hist.sum(), 1)), 3),
+        }
+        if noc != "ideal" and cols > 2:
+            load = _col_load(flits, rows_, cols)
+            interior = load[1:cols - 1].mean()
+            boundary = (load[0] + load[cols - 1]) / 2
+            row["center_over_edge"] = round(interior / max(boundary, 1e-9), 3)
+        out.append(row)
+        # finite links: the same wiring under backpressure — spill/replay
+        # cost of the hotspot (mesh pays the most, express channels least)
+        res_c = alg.bfs(pg, root, engine_cfg(T=T, noc=noc, link_cap=4))
+        out.append({
+            "bench": "fig8-topo-capped", "noc": noc,
+            "rounds": int(res_c.stats.rounds),
+            "spills": int(res_c.stats.spills_range
+                          + res_c.stats.spills_update),
+            "drops": int(res_c.stats.drops),
+        })
+    return out
+
+
 def run(scale: int = 10, T: int = 16) -> list[dict]:
     g = rmat_graph(scale)
     rows = _static_rows(g, T, "")
@@ -69,4 +127,6 @@ def run(scale: int = 10, T: int = 16) -> list[dict]:
             "spills": int(res.stats.spills_range
                           + res.stats.spills_update),
         })
+    # the torus-vs-mesh-vs-ruche rungs (paper Fig. 8/9) on the live fabric
+    rows += _topology_rows(g, T)
     return rows

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import AxisComm, LocalComm
+from repro.core.comm import AxisComm, LocalComm, shard_map_compat
 from repro.core.engine import (BFS, PAGERANK, SPMV, SSSP, WCC, AlgSpec,
                                EngineConfig, EngineState, GraphShard, INF,
                                Stats, init_state, run_engine)
@@ -113,11 +113,10 @@ def spmd_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
                                pg.e_chunk, pg.v_chunk)
         return st.value[None], st.acc[None], stats
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(spec2,) * 6,
-        out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero())),
-        check_vma=False)
+        out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero())))
     args = [jax.device_put(a, NamedSharding(mesh, spec2)) for a in
             (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val, value, frontier)]
     return jax.jit(fn)(*args)
@@ -187,7 +186,7 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
     real = real_mask(pg)
     deg = np.asarray(pg.deg)
     rank = np.where(real, np.float32(1.0 / V), 0.0).astype(np.float32)
-    total = Stats.zero()
+    total = None  # telemetry shapes depend on the NoC backend
     epochs = 0
     for _ in range(iters):
         frontier = jnp.asarray(real & (deg > 0))
@@ -200,11 +199,21 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
             0.0).astype(np.float32)
         diff = np.abs(new_rank - rank).sum()
         rank = new_rank
-        total = jax.tree.map(lambda a, b: a + b, total, stats)
+        total = stats if total is None else _acc_stats(total, stats)
         epochs += 1
         if tol and diff < tol:
             break
+    if total is None:  # iters == 0
+        total = Stats.zero()
     return Result(to_original(pg, rank).astype(np.float64), total, epochs)
+
+
+def _acc_stats(a: Stats, b: Stats) -> Stats:
+    """Combine per-epoch Stats: counters add, peaks take the max."""
+    merged = jax.tree.map(lambda x, y: x + y, a, b)
+    return merged._replace(
+        max_link_occupancy=jnp.maximum(a.max_link_occupancy,
+                                       b.max_link_occupancy))
 
 
 # --------------------------------------------------------------------------

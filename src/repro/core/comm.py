@@ -51,6 +51,13 @@ class AxisComm:
         """Run a per-device function (identity here; LocalComm vmaps)."""
         return fn(self.my_id(), *args)
 
+    def to_global(self, x):
+        """Collapse a replicated per-device value to one global copy.
+
+        Under AxisComm a post-``psum``/``pmax`` value is already the global
+        copy; under LocalComm it carries a broadcast leading T axis."""
+        return x
+
 
 @dataclasses.dataclass(frozen=True)
 class LocalComm:
@@ -84,3 +91,18 @@ class LocalComm:
 
     def run(self, fn, *args):
         return jax.vmap(fn)(self.my_id(), *args)
+
+    def to_global(self, x):
+        """Collapse a broadcast (T, ...) per-device value to one copy."""
+        return x[0]
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (>=0.6 top-level, older
+    versions ship it as ``jax.experimental.shard_map`` with ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

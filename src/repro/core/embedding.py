@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import shard_map_compat
 from repro.core.queues import occurrence_index
 from repro.parallel.sharding import current_mesh, current_rules
 
@@ -109,11 +110,10 @@ def routed_embed(table, ids, *, model_axis: str = "model",
         return emb, jax.lax.psum(ovf, model_axis)
 
     out_emb_spec = P(bspec, sspec, None)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(model_axis, None), P(bspec, sspec)),
-        out_specs=(out_emb_spec, P()),
-        check_vma=False)
+        out_specs=(out_emb_spec, P()))
     return fn(table, ids)
 
 

@@ -7,17 +7,24 @@ device executes the paper's task pipeline on its own shard:
   T4/T1  pop local frontier bits  -> edge-range tasks into the range queue
   T1b    pop range queue          -> bounded range *messages* (split at chunk
                                      borders and at MAX_T2, Listing 1)
-         --- route by owner(edge_index), one all_to_all ---
+         --- route by owner(edge_index) over the NoC backend ---
   T2     scan local edges         -> update messages (neighbor, value)
-         --- route by owner(vertex_index), one all_to_all ---
+         --- route by owner(vertex_index) over the NoC backend ---
   T3     fold updates into local shard (scatter-min / scatter-add;
          atomic-free because this device is the only owner), set local
          frontier bits for improved vertices.
 
-Backpressure: routing capacity is finite; overflow *spills* back into the
-local queues and is replayed next round — the software form of the paper's
-"CQ full -> early exit, resume next invocation".  Nothing is ever dropped;
-tests assert the ``drops == 0`` invariant.
+The fabric between stages is a pluggable :mod:`repro.noc` Network selected
+by ``EngineConfig.noc``: the ideal crossbar (the original semantics), or a
+physical mesh / torus / ruche grid with dimension-ordered routing, per-link
+capacities, and per-link telemetry (``Stats.flits_per_link`` etc.).
+
+Backpressure: routing capacity is finite (endpoint slots *and*, for the
+physical NoCs, per-link flits); overflow *spills* back into the local queues
+— of whichever tile the message is stranded at, since routes are re-derived
+from the head flit — and is replayed next round, the software form of the
+paper's "CQ full -> early exit, resume next invocation".  Nothing is ever
+dropped; tests assert the ``drops == 0`` invariant.
 
 Scheduling: per-round budgets are chosen per device from queue occupancies —
 the Task Scheduling Unit's traffic-aware priorities (Section III-E), adapted
@@ -56,7 +63,7 @@ from repro.core.comm import AxisComm, LocalComm
 from repro.core.graph import PartitionedGraph
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
-from repro.core.routing import route_tasks
+from repro.noc import make_network
 
 
 # --------------------------------------------------------------------------
@@ -120,19 +127,43 @@ class EngineConfig:
     max_t2: int = 32         # edge-scan bound per range message (MAX_T2)
     cap_route_range: int = 16    # CQ1: range-message slots per destination
     cap_route_update: int = 64   # CQ2: update-message slots per destination
-    cap_rangeq: int = 256    # local range-queue capacity (IQ1)
+    cap_rangeq: int = 2048   # local range-queue capacity (IQ1)
     cap_updq: int = 16384    # local spilled-update queue capacity
     policy: str = "traffic"  # "traffic" | "static"
     mode: str = "async"      # "async" (barrierless) | "bsp"
     max_rounds: int = 100_000
+    # --- NoC backend (repro.noc) ---
+    noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche"
+    noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
+    link_cap: int = 0        # flits per directed link per routing leg (a
+                             # round has two legs: range + update); 0 = off
+    ruche_factor: int = 2    # tiles skipped by a ruche channel (noc="ruche")
+
+    def min_caps(self, T: int) -> tuple[int, int]:
+        """Worst-case per-round queue inflow: (rangeq_need, updq_need).
+
+        T2 output volume bounds the updq burst; physical NoCs additionally
+        spill mid-route messages into the *waypoint* tile's queues, so a
+        worst-case concentrated round (every inbound slot of both legs
+        spilling here, plus this tile's own T1 remainder and source-spill
+        re-pushes) must fit.  Sizing helpers and :meth:`validate` share
+        these formulas — keep them in one place.
+        """
+        burst = T * self.cap_route_range * self.max_t2 + self.u_pop
+        rangeq_need = 2 * self.f_pop
+        if self.noc != "ideal":
+            burst += T * self.cap_route_update
+            rangeq_need += 2 * self.r_pop + T * self.cap_route_range
+        return rangeq_need, burst
 
     def validate(self, T: int):
-        # T2 output volume bound per round; updq must absorb a full burst so
-        # the no-drop invariant holds even under static scheduling.
-        burst = T * self.cap_route_range * self.max_t2 + self.u_pop
+        # queues must absorb a full worst-case burst so the no-drop
+        # invariant holds even under static scheduling.
+        rangeq_need, burst = self.min_caps(T)
         assert self.cap_updq >= burst, (
             f"cap_updq={self.cap_updq} < worst-case T2 burst {burst}")
-        assert self.cap_rangeq >= 2 * self.f_pop, "range queue too small"
+        assert self.cap_rangeq >= rangeq_need, (
+            f"cap_rangeq={self.cap_rangeq} < worst-case inflow {rangeq_need}")
 
 
 class EngineState(NamedTuple):
@@ -142,6 +173,7 @@ class EngineState(NamedTuple):
     next_frontier: jax.Array  # (v_chunk,) bool — BSP-deferred frontier
     rangeq: Queue         # pending edge-range tasks (start, end, parent_bits)
     updq: Queue           # spilled update messages (neighbor, value_bits)
+    net_pressure: jax.Array  # () i32 — last round's occupancy on own links
 
 
 class Stats(NamedTuple):
@@ -155,11 +187,17 @@ class Stats(NamedTuple):
     updates_applied: jax.Array  # valid T3 folds
     drops: jax.Array            # MUST be 0 — backpressure invariant
     work_max: jax.Array         # max per-device edges_scanned (balance)
+    # --- NoC telemetry (shapes fixed by the Network backend) ---
+    flits_per_link: jax.Array       # (num_links,) cumulative flit traversals
+    max_link_occupancy: jax.Array   # () peak per-round per-link occupancy
+    hop_histogram: jax.Array        # (max_hops+1,) injections by hop count
 
     @staticmethod
-    def zero():
+    def zero(num_links: int = 1, max_hops: int = 1):
         z = jnp.zeros((), jnp.int32)
-        return Stats(z, z, z, z, z, z, z, z, z, z)
+        return Stats(z, z, z, z, z, z, z, z, z, z,
+                     jnp.zeros((num_links,), jnp.int32), z,
+                     jnp.zeros((max_hops + 1,), jnp.int32))
 
 
 class GraphShard(NamedTuple):
@@ -174,8 +212,14 @@ class GraphShard(NamedTuple):
 # Per-device pipeline stages (pure; run under comm.run -> vmap or shard_map).
 # --------------------------------------------------------------------------
 
-def _budgets(cfg: EngineConfig, st: EngineState):
-    """The TSU: per-round budgets from queue occupancies (Section III-E)."""
+def _budgets(cfg: EngineConfig, st: EngineState, plimit: int):
+    """The TSU: per-round budgets from queue occupancies AND link occupancy
+    (Section III-E).  Queue counts expose endpoint congestion; the NoC's
+    per-link occupancy from the previous round (``st.net_pressure``, fed
+    back by the Network backend) exposes fabric congestion — a hot link on
+    this tile's row/column throttles producers exactly like a filling IQ.
+    ``plimit`` is the backend's own hot threshold (``net.pressure_limit``).
+    """
     rq_free = jnp.int32(cfg.cap_rangeq) - st.rangeq.count
     if cfg.policy == "static":
         f_pop = jnp.minimum(jnp.int32(cfg.f_pop), jnp.maximum(rq_free, 0))
@@ -184,12 +228,13 @@ def _budgets(cfg: EngineConfig, st: EngineState):
         return f_pop, r_pop, u_pop
     # traffic-aware: high priority = drain a nearly-full IQ; medium = feed a
     # nearly-empty OQ; throttle producers of congested consumers.
+    net_hot = st.net_pressure > jnp.int32(max(plimit, 1))
     upd_congested = st.updq.count > (3 * cfg.cap_updq) // 4
     rng_congested = st.rangeq.count > cfg.cap_rangeq // 2
     u_pop = jnp.int32(cfg.u_pop)  # always drain updates first
-    r_pop = jnp.where(upd_congested, jnp.int32(cfg.r_pop // 4),
+    r_pop = jnp.where(upd_congested | net_hot, jnp.int32(cfg.r_pop // 4),
                       jnp.int32(cfg.r_pop))
-    f_pop = jnp.where(rng_congested | upd_congested, jnp.int32(0),
+    f_pop = jnp.where(rng_congested | upd_congested | net_hot, jnp.int32(0),
                       jnp.minimum(jnp.int32(cfg.f_pop),
                                   jnp.maximum(rq_free - 2 * cfg.f_pop, 0)))
     return f_pop, r_pop, u_pop
@@ -210,9 +255,9 @@ def _take_first_k(mask: jax.Array, k: jax.Array, k_max: int):
 
 
 def _stage_a(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
-             sh: GraphShard, st: EngineState):
+             sh: GraphShard, st: EngineState, plimit: int):
     """T4 + T1: frontier -> range queue -> bounded range messages."""
-    f_pop, r_pop, _ = _budgets(cfg, st)
+    f_pop, r_pop, _ = _budgets(cfg, st, plimit)
 
     # T4: pop up to f_pop frontier vertices (paper: bitmap scan via IQ4).
     vidx, vvalid, frontier = _take_first_k(st.frontier, f_pop, cfg.f_pop)
@@ -232,17 +277,16 @@ def _stage_a(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
     boundary = (t_start // e_chunk + 1) * e_chunk
     stop = jnp.minimum(jnp.minimum(t_end, boundary), t_start + cfg.max_t2)
     msgs = jnp.stack([t_start, stop, t_pb], axis=1)
-    dest = t_start // e_chunk
     rem = jnp.stack([stop, t_end, t_pb], axis=1)
     rangeq, d1 = queue_push(rangeq, rem, tvalid & (stop < t_end))
 
     st = st._replace(frontier=frontier, rangeq=rangeq)
-    return st, msgs, tvalid, dest, d0 + d1
+    return st, msgs, tvalid, d0 + d1
 
 
 def _stage_b(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int, v_chunk: int,
              sh: GraphShard, st: EngineState, recv, recv_valid,
-             spill, spill_valid):
+             spill, spill_valid, plimit: int):
     """T2: scan local edges for each received range message; emit updates.
 
     Also replays spilled range messages (back into the range queue) and pops
@@ -265,14 +309,13 @@ def _stage_b(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int, v_chunk: int,
     fresh_valid = jvalid.reshape(-1)
     edges = jvalid.sum(dtype=jnp.int32)
 
-    _, _, u_pop = _budgets(cfg, st)
+    _, _, u_pop = _budgets(cfg, st, plimit)
     replay, replay_valid, updq = queue_take_front(st.updq, u_pop, cfg.u_pop)
     upd = jnp.concatenate([replay, fresh], axis=0)
     uvalid = jnp.concatenate([replay_valid, fresh_valid], axis=0)
-    dest = upd[:, 0] // v_chunk
 
     st = st._replace(rangeq=rangeq, updq=updq)
-    return st, upd, uvalid, dest, edges, d0
+    return st, upd, uvalid, edges, d0
 
 
 def _stage_c(me, cfg: EngineConfig, alg: AlgSpec, v_chunk: int,
@@ -320,30 +363,47 @@ def _bsp_swap(me, st: EngineState, do_swap):
 # The round + driver, parametric over the comm backend.
 # --------------------------------------------------------------------------
 
-def make_round(comm, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
+def make_round(comm, net, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
                v_chunk: int, shard: GraphShard):
-    """Build the per-round function (state, stats) -> (state, stats, pending)."""
+    """Build the per-round function (state, stats) -> (state, stats, pending).
+
+    ``net`` is a :mod:`repro.noc` Network backend; both routing legs go
+    through it, with the destination decoded from the head flit (the
+    paper's headerless routing) — range messages are owned by the tile
+    holding the edge chunk, updates by the tile owning the vertex.
+    """
+
+    plimit = net.pressure_limit(cfg)
 
     def stage_a(me, sh, st):
-        return _stage_a(me, cfg, alg, e_chunk, sh, st)
+        return _stage_a(me, cfg, alg, e_chunk, sh, st, plimit)
 
     def stage_b(me, sh, st, recv, rv, sp, spv):
         return _stage_b(me, cfg, alg, e_chunk, v_chunk, sh, st, recv, rv,
-                        sp, spv)
+                        sp, spv, plimit)
 
     def stage_c(me, st, recv, rv, sp, spv):
         return _stage_c(me, cfg, alg, v_chunk, st, recv, rv, sp, spv)
 
     def rnd(st: EngineState, stats: Stats):
-        st, msgs, mvalid, mdest, drop_a = comm.run(stage_a, shard, st)
-        routed = route_tasks(comm, msgs, mvalid, mdest, cfg.cap_route_range)
-        st, upd, uvalid, udest, edges, drop_b = comm.run(
+        st, msgs, mvalid, drop_a = comm.run(stage_a, shard, st)
+        routed = net.route(comm, msgs, mvalid, cfg.cap_route_range,
+                           lambda m: m[..., 0] // e_chunk)
+        st, upd, uvalid, edges, drop_b = comm.run(
             stage_b, shard, st, routed.recv, routed.recv_valid,
             routed.spill, routed.spill_valid)
-        routed2 = route_tasks(comm, upd, uvalid, udest, cfg.cap_route_update)
+        routed2 = net.route(comm, upd, uvalid, cfg.cap_route_update,
+                            lambda m: m[..., 0] // v_chunk)
         st, applied, drop_c = comm.run(
             stage_c, st, routed2.recv, routed2.recv_valid,
             routed2.spill, routed2.spill_valid)
+
+        # NoC telemetry: global per-link occupancy of this round, and the
+        # per-tile pressure fed back into next round's TSU budgets.
+        link_round = comm.psum(routed.link_flits + routed2.link_flits)
+        hop_round = comm.psum(routed.hop_hist + routed2.hop_hist)
+        st = st._replace(net_pressure=comm.run(
+            lambda me, lf: net.pressure(me, lf), link_round))
 
         pending = comm.psum(comm.run(_pending, st))
         nxt = comm.psum(comm.run(_next_pending, st))
@@ -362,27 +422,28 @@ def make_round(comm, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
         drops = comm.psum(drop_a + drop_b + drop_c)
         edges_t = comm.psum(edges)
         edges_m = comm.pmax(edges)
+        glob = comm.to_global
+        link_g = glob(link_round)
         stats = Stats(
             rounds=stats.rounds + 1,
-            epochs=stats.epochs + _scalar(epochs_inc),
-            msgs_range=stats.msgs_range + _scalar(comm.psum(routed.sent)),
-            msgs_update=stats.msgs_update + _scalar(comm.psum(routed2.sent)),
-            spills_range=stats.spills_range + _scalar(spills_r),
-            spills_update=stats.spills_update + _scalar(spills_u),
-            edges_scanned=stats.edges_scanned + _scalar(edges_t),
+            epochs=stats.epochs + glob(epochs_inc),
+            msgs_range=stats.msgs_range + glob(comm.psum(routed.sent)),
+            msgs_update=stats.msgs_update + glob(comm.psum(routed2.sent)),
+            spills_range=stats.spills_range + glob(spills_r),
+            spills_update=stats.spills_update + glob(spills_u),
+            edges_scanned=stats.edges_scanned + glob(edges_t),
             updates_applied=stats.updates_applied
-            + _scalar(comm.psum(applied)),
-            drops=stats.drops + _scalar(drops),
-            work_max=stats.work_max + _scalar(edges_m),
+            + glob(comm.psum(applied)),
+            drops=stats.drops + glob(drops),
+            work_max=stats.work_max + glob(edges_m),
+            flits_per_link=stats.flits_per_link + link_g,
+            max_link_occupancy=jnp.maximum(stats.max_link_occupancy,
+                                           link_g.max()),
+            hop_histogram=stats.hop_histogram + glob(hop_round),
         )
-        return st, stats, _scalar(pending)
+        return st, stats, glob(pending)
 
     return rnd
-
-
-def _scalar(x):
-    """Collapse a LocalComm broadcast (T,) vector to a scalar; id on scalars."""
-    return x if x.ndim == 0 else x[0]
 
 
 def _bcast(comm, x):
@@ -411,6 +472,7 @@ def init_state(comm, cfg: EngineConfig, v_chunk: int,
         next_frontier=jnp.zeros(lead + (v_chunk,), bool),
         rangeq=mk_queue(cfg.cap_rangeq, 3),
         updq=mk_queue(cfg.cap_updq, 2),
+        net_pressure=jnp.zeros(lead, jnp.int32),
     )
 
 
@@ -418,7 +480,8 @@ def run_engine(comm, cfg: EngineConfig, alg: AlgSpec, shard: GraphShard,
                st: EngineState, e_chunk: int, v_chunk: int):
     """Run rounds until the global idle signal fires (or max_rounds)."""
     cfg.validate(comm.size)
-    rnd = make_round(comm, cfg, alg, e_chunk, v_chunk, shard)
+    net = make_network(cfg, comm.size)
+    rnd = make_round(comm, net, cfg, alg, e_chunk, v_chunk, shard)
 
     def cond(carry):
         _, _, pending, r = carry
@@ -429,7 +492,8 @@ def run_engine(comm, cfg: EngineConfig, alg: AlgSpec, shard: GraphShard,
         st, stats, pending = rnd(st, stats)
         return st, stats, pending, r + 1
 
-    pending0 = _scalar(comm.psum(comm.run(_pending, st)))
+    pending0 = comm.to_global(comm.psum(comm.run(_pending, st)))
     st, stats, _, _ = jax.lax.while_loop(
-        cond, body, (st, Stats.zero(), pending0, jnp.int32(0)))
+        cond, body, (st, Stats.zero(net.num_links, net.max_hops), pending0,
+                     jnp.int32(0)))
     return st, stats

@@ -8,6 +8,12 @@ the paper's head-flit encoding.  We take the idea one step further: slot
 *emptiness* is also encoded in the head flit (index < 0), so a routing round
 exchanges exactly one buffer — no side-band validity traffic.
 
+This module is the single-exchange *primitive*; the engine routes through
+the pluggable :mod:`repro.noc` subsystem, whose ``IdealAllToAll`` backend
+is exactly one :func:`route_tasks` round and whose physical backends
+(mesh / torus / ruche) compose :func:`bin_by_owner` + ``comm.a2a`` into
+dimension-ordered per-axis exchanges with per-link backpressure.
+
 ``route_tasks`` performs one network round:
 
 1. each device bins its outgoing messages by destination shard

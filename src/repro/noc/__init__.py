@@ -1,0 +1,15 @@
+"""Pluggable NoC subsystem: topology-aware routing for the Dalorex engine.
+
+See :mod:`repro.noc.network` for the backend contract and
+:mod:`repro.noc.topology` for the grid/link model.
+"""
+from repro.noc.network import (IdealAllToAll, Mesh2D, NetRouted, Ruche,
+                               Torus2D, make_network)
+from repro.noc.topology import (LOCAL_BWD, LOCAL_FWD, N_CHANNELS, RUCHE_BWD,
+                                RUCHE_FWD, admit, grid_shape, line_usage)
+
+__all__ = [
+    "IdealAllToAll", "Mesh2D", "Torus2D", "Ruche", "NetRouted",
+    "make_network", "grid_shape", "line_usage", "admit", "N_CHANNELS",
+    "LOCAL_FWD", "LOCAL_BWD", "RUCHE_FWD", "RUCHE_BWD",
+]

@@ -1,0 +1,115 @@
+"""Tile-grid geometry for the physical NoC backends.
+
+A grid of ``T = rows * cols`` tiles; tile ``t`` sits at ``(t // cols,
+t % cols)``.  Dimension-ordered (X-then-Y) routing decomposes every route
+into two 1-D journeys, so all link math lives in one helper,
+:func:`line_usage`, parametric over the wiring of a single line of ``n``
+tiles:
+
+* mesh  — bidirectional neighbor links; travel is monotone toward the goal.
+* torus — neighbor links plus wraparound; travel takes the shorter way.
+* ruche — mesh plus long-range "ruche" channels that skip ``R`` tiles
+  (HammerBlade-style); travel greedily rides ruche channels while the
+  remaining distance allows, then finishes on local links.
+
+Directed links on a line of ``n`` tiles are indexed by their *source*
+position in four channel classes (unused classes/positions simply never
+see traffic):
+
+  ``LOCAL_FWD``  i -> i+1   (torus: i -> (i+1) % n)
+  ``LOCAL_BWD``  i -> i-1   (torus: i -> (i-1) % n)
+  ``RUCHE_FWD``  i -> i+R
+  ``RUCHE_BWD``  i -> i-R
+
+:func:`admit` implements the per-link analogue of the channel-queue
+backpressure in ``core.routing``: a message is admitted into the fabric for
+this round only if every directed link on its path has seen fewer than
+``cap`` flits from earlier messages in FIFO order.  The count is
+conservative — blocked messages also consume their claimed slots — which
+keeps the admission decision a pure prefix-scan (vectorizable, identical
+under vmap and shard_map).  The head of the FIFO always sails through, so
+spill-and-replay makes progress every round and nothing is ever dropped.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+N_CHANNELS = 4
+LOCAL_FWD, LOCAL_BWD, RUCHE_FWD, RUCHE_BWD = range(N_CHANNELS)
+
+
+def grid_shape(T: int, rows: int = 0) -> tuple[int, int]:
+    """Factor ``T`` tiles into a (rows, cols) grid, near-square by default."""
+    if rows <= 0:
+        rows = max(int(math.isqrt(T)), 1)
+        while T % rows:
+            rows -= 1
+    if T % rows:
+        raise ValueError(f"rows={rows} does not divide T={T}")
+    return rows, T // rows
+
+
+def line_usage(a, b, n: int, wrap: bool = False, ruche: int = 0):
+    """Per-link usage of travel ``a -> b`` along one axis of the grid.
+
+    a, b: (N,) int32 positions in [0, n).  Returns ``(hops, use)`` where
+    ``hops`` is (N,) int32 and ``use`` is (N, N_CHANNELS, n) bool marking
+    every directed link each message traverses.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    ln = jnp.arange(n, dtype=jnp.int32)[None, :]
+    a_, b_ = a[:, None], b[:, None]
+    zero = jnp.zeros(a_.shape[:1] + (n,), bool)
+    if wrap:
+        d = (b - a) % n
+        fwd = d <= n // 2
+        hops = jnp.where(fwd, d, n - d)
+        use_f = fwd[:, None] & (((ln - a_) % n) < d[:, None])
+        use_b = (~fwd)[:, None] & (((a_ - ln) % n) < (n - d)[:, None])
+        use_rf = use_rb = zero
+    elif ruche > 1:
+        dist = b - a
+        fwd = dist >= 0
+        ad = jnp.abs(dist)
+        k, rem = ad // ruche, ad % ruche
+        hops = k + rem
+        kr = (k * ruche)[:, None]
+        use_rf = (fwd[:, None] & (ln >= a_) & (ln < a_ + kr)
+                  & ((ln - a_) % ruche == 0))
+        use_f = fwd[:, None] & (ln >= a_ + kr) & (ln < b_)
+        use_rb = ((~fwd)[:, None] & (ln <= a_) & (ln > a_ - kr)
+                  & ((a_ - ln) % ruche == 0))
+        use_b = (~fwd)[:, None] & (ln <= a_ - kr) & (ln > b_)
+    else:
+        dist = b - a
+        fwd = dist >= 0
+        hops = jnp.abs(dist)
+        use_f = fwd[:, None] & (ln >= a_) & (ln < b_)
+        use_b = (~fwd)[:, None] & (ln <= a_) & (ln > b_)
+        use_rf = use_rb = zero
+    return hops, jnp.stack([use_f, use_b, use_rf, use_rb], axis=1)
+
+
+def admit(use, valid, cap: int, base=None):
+    """FIFO per-link admission under a per-round link capacity.
+
+    use: (N, C, L) bool link usage per message; valid: (N,) bool.  Message i
+    is admitted iff every link it uses has < ``cap`` flits claimed by earlier
+    valid messages (claims are counted whether or not those messages were
+    themselves admitted — see module docstring).  ``base`` (C, L) int32 adds
+    claims already standing against each link — the grid backends pass the
+    summed claims of tiles earlier in the global admission order, so the
+    capacity is enforced *per link*, not per injector.  ``cap <= 0``
+    disables the limit (infinite links; telemetry still records occupancy).
+    """
+    if cap <= 0:
+        return valid
+    u = (use & valid[:, None, None]).astype(jnp.int32)
+    prior = jnp.cumsum(u, axis=0) - u  # exclusive prefix per link
+    if base is not None:
+        prior = prior + base[None]
+    worst = jnp.where(use, prior, 0).max(axis=(1, 2))
+    return valid & (worst < cap)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import shard_map_compat
+
 
 def pipeline_apply(stage_fn, params, x, *, mesh, axis: str, n_micro: int):
     """params: pytree with leading (n_stages,) axis on every leaf.
@@ -58,11 +60,10 @@ def pipeline_apply(stage_fn, params, x, *, mesh, axis: str, n_micro: int):
         return outs
 
     pspecs = jax.tree.map(lambda _: P(axis), params)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(pspecs, P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     return fn(params, x)
 
 

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import shard_map_compat
+
 NEG_INF = -1e30
 
 
@@ -103,9 +105,8 @@ def ring_attention(q, k, v, *, mesh, model_axis: str = "model",
             Bl, S_loc, H, hd).astype(qb.dtype)
 
     spec_q = P(bspec, model_axis, None, None)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(spec_q, spec_q, spec_q),
-        out_specs=spec_q,
-        check_vma=False)
+        out_specs=spec_q)
     return fn(q, k, v)

@@ -1,0 +1,16 @@
+"""Shared test fixtures / environment shims.
+
+* Ensures ``src`` is importable even when PYTHONPATH wasn't set (CI and
+  bare ``pytest`` runs behave the same as the documented tier-1 command).
+* Lets the suite *collect* when optional dev deps (``hypothesis``) are
+  missing: the property-test modules guard themselves with
+  ``pytest.importorskip``, which needs collection to reach them instead of
+  erroring at import — nothing here may import hypothesis eagerly.
+"""
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.isdir(SRC) and os.path.abspath(SRC) not in map(os.path.abspath,
+                                                          sys.path):
+    sys.path.insert(0, os.path.abspath(SRC))

@@ -1,5 +1,8 @@
 """Property tests for placement/distribution invariants + dry-run helpers."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distribution import DistSpec, placement, padded_len

@@ -1,0 +1,239 @@
+"""NoC subsystem invariants: routing correctness, link backpressure,
+cross-backend result equivalence, and telemetry conservation.
+
+The system invariants under test:
+  * line_usage enumerates exactly the links dimension-ordered travel
+    crosses (mesh monotone, torus shorter-way, ruche express-then-local);
+  * admit is FIFO and never starves the queue head;
+  * one Network round conserves messages: received + spilled == injected,
+    and every delivered message lands on its owner tile;
+  * under tiny per-link capacities nothing is dropped, spills are replayed
+    to completion, and results match the sequential oracles;
+  * min-fold workloads (BFS/SSSP/WCC) are bit-identical across ALL
+    backends; add-folds (PageRank/SpMV) agree to float tolerance (delivery
+    rounds differ, so scatter-adds re-associate);
+  * with no capacity pressure, flit telemetry is conserved:
+    sum(flits_per_link) == sum(hops * hop_histogram).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.comm import LocalComm
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+from repro.noc import (LOCAL_BWD, LOCAL_FWD, RUCHE_BWD, RUCHE_FWD,
+                       IdealAllToAll, Mesh2D, Ruche, Torus2D, admit,
+                       grid_shape, line_usage, make_network)
+
+BACKENDS = ("ideal", "mesh", "torus", "ruche")
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=128, cap_updq=2048,
+                max_rounds=20000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def g():
+    n, src, dst, val = rmat_edges(8, edge_factor=6, seed=0)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return alg.prepare(g, T=4)  # 2x2 grid
+
+
+def root_of(g):
+    return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+
+
+# --------------------------------------------------------------------------
+# Geometry units.
+# --------------------------------------------------------------------------
+
+def test_grid_shape_near_square():
+    assert grid_shape(16) == (4, 4)
+    assert grid_shape(8) == (2, 4)
+    assert grid_shape(5) == (1, 5)
+    assert grid_shape(12, rows=3) == (3, 4)
+    with pytest.raises(ValueError):
+        grid_shape(10, rows=4)
+
+
+def links(use, chan):
+    return np.flatnonzero(np.asarray(use)[0, chan]).tolist()
+
+
+def test_line_usage_mesh():
+    hops, use = line_usage(jnp.array([0]), jnp.array([3]), 4)
+    assert int(hops[0]) == 3 and links(use, LOCAL_FWD) == [0, 1, 2]
+    hops, use = line_usage(jnp.array([3]), jnp.array([1]), 4)
+    assert int(hops[0]) == 2 and links(use, LOCAL_BWD) == [2, 3]
+    hops, use = line_usage(jnp.array([2]), jnp.array([2]), 4)
+    assert int(hops[0]) == 0 and not np.asarray(use).any()
+
+
+def test_line_usage_torus_takes_shorter_way():
+    # 0 -> 3 on a 4-ring: one hop backward over the wrap link at 0
+    hops, use = line_usage(jnp.array([0]), jnp.array([3]), 4, wrap=True)
+    assert int(hops[0]) == 1 and links(use, LOCAL_BWD) == [0]
+    # 3 -> 1: two hops forward over the wrap (links at 3 and 0)
+    hops, use = line_usage(jnp.array([3]), jnp.array([1]), 4, wrap=True)
+    assert int(hops[0]) == 2 and links(use, LOCAL_FWD) == [0, 3]
+
+
+def test_line_usage_ruche_express_then_local():
+    # 0 -> 5 with R=2: express hops at 0 and 2, local hop at 4
+    hops, use = line_usage(jnp.array([0]), jnp.array([5]), 8, ruche=2)
+    assert int(hops[0]) == 3
+    assert links(use, RUCHE_FWD) == [0, 2] and links(use, LOCAL_FWD) == [4]
+    # backward mirror: 5 -> 0
+    hops, use = line_usage(jnp.array([5]), jnp.array([0]), 8, ruche=2)
+    assert int(hops[0]) == 3
+    assert links(use, RUCHE_BWD) == [3, 5] and links(use, LOCAL_BWD) == [1]
+
+
+def test_admit_fifo_respects_cap_and_never_starves_head():
+    # four messages all crossing link 0: cap=2 admits exactly the first two
+    _, use = line_usage(jnp.zeros(4, jnp.int32), jnp.ones(4, jnp.int32), 2)
+    valid = jnp.ones(4, bool)
+    ok = np.asarray(admit(use, valid, cap=2))
+    assert ok.tolist() == [True, True, False, False]
+    # invalid rows don't consume capacity
+    ok = np.asarray(admit(use, jnp.array([False, True, True, False]), 2))
+    assert ok.tolist() == [False, True, True, False]
+    # the FIFO head always passes, even at cap=1
+    assert bool(admit(use, valid, cap=1)[0])
+    # cap<=0 disables the limit
+    assert np.asarray(admit(use, valid, cap=0)).all()
+
+
+# --------------------------------------------------------------------------
+# One Network round: conservation + ownership.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net", [
+    IdealAllToAll(8),
+    Mesh2D(8, 2, 4, link_cap=1),
+    Torus2D(8, 2, 4, link_cap=2),
+    Ruche(8, 2, 4, link_cap=1, ruche_factor=2),
+])
+def test_route_conserves_and_delivers_to_owner(net):
+    T, n, chunk = 8, 24, 16
+    rng = np.random.default_rng(3)
+    idx = jnp.asarray(rng.integers(0, T * chunk, (T, n)), jnp.int32)
+    msgs = jnp.stack([idx, idx * 7], axis=2)
+    valid = jnp.asarray(rng.random((T, n)) < 0.8)
+    comm = LocalComm(T)
+    r = net.route(comm, msgs, valid, capacity=4,
+                  dest_fn=lambda m: m[..., 0] // chunk)
+    n_in = int(valid.sum())
+    n_recv = int(r.recv_valid.sum())
+    n_spill = int(r.spill_valid.sum())
+    assert n_recv + n_spill == n_in
+    # every delivered message sits on the tile that owns its head index
+    owner = np.asarray(r.recv[..., 0]) // chunk
+    me = np.arange(T)[:, None]
+    rv = np.asarray(r.recv_valid)
+    assert (owner[rv] == np.broadcast_to(me, rv.shape)[rv]).all()
+    # per-round per-link occupancy respects the cap (psum over tiles)
+    if not isinstance(net, IdealAllToAll) and net.link_cap > 0:
+        occ = np.asarray(r.link_flits).sum(axis=0)
+        assert occ.max() <= net.link_cap
+
+
+def test_spilled_messages_replay_to_completion(pg, g):
+    """link_cap=1 on a 2x2 grid forces heavy spilling; everything must
+    still arrive (oracle equality) with zero drops."""
+    root = root_of(g)
+    for noc in ("mesh", "torus", "ruche"):
+        res = alg.bfs(pg, root, small_cfg(noc=noc, link_cap=1))
+        np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))
+        assert int(res.stats.drops) == 0
+        assert int(res.stats.spills_range + res.stats.spills_update) > 0
+
+
+# --------------------------------------------------------------------------
+# Cross-backend result equivalence (tiny per-link capacities).
+# --------------------------------------------------------------------------
+
+def test_min_folds_bit_identical_across_backends(pg, g):
+    root = root_of(g)
+    gs = alg.symmetrize(g)
+    pgs = alg.prepare(gs, T=4)
+    base = {n: small_cfg(noc=n, link_cap=2) for n in BACKENDS}
+    bfs = {n: alg.bfs(pg, root, c) for n, c in base.items()}
+    sssp = {n: alg.sssp(pg, root, c) for n, c in base.items()}
+    wcc = {n: alg.wcc(pgs, c) for n, c in base.items()}
+    for n in BACKENDS:
+        assert int(bfs[n].stats.drops) == 0
+        np.testing.assert_array_equal(bfs[n].values, bfs["ideal"].values)
+        np.testing.assert_array_equal(sssp[n].values, sssp["ideal"].values)
+        np.testing.assert_array_equal(wcc[n].values, wcc["ideal"].values)
+
+
+def test_add_folds_match_oracle_under_every_backend(pg, g):
+    x = np.random.default_rng(1).normal(size=g.num_vertices).astype(
+        np.float32)
+    y_ref = ref.spmv_ref(g, x.astype(np.float64))
+    pr_ref = ref.pagerank_ref(g, iters=5)
+    for noc in BACKENDS:
+        cfg = small_cfg(noc=noc, link_cap=2)
+        res = alg.spmv(pg, x, cfg)
+        np.testing.assert_allclose(res.values, y_ref, rtol=2e-4, atol=1e-4)
+        res = alg.pagerank(pg, iters=5, cfg=cfg)
+        np.testing.assert_allclose(res.values, pr_ref, rtol=2e-3, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# Telemetry.
+# --------------------------------------------------------------------------
+
+def test_flit_telemetry_conserved_without_spills(pg, g):
+    """With generous capacities nothing spills, so every injection travels
+    its full path this round: sum(flits) == sum(hops * histogram)."""
+    root = root_of(g)
+    for noc in BACKENDS:
+        cfg = small_cfg(noc=noc, link_cap=0, cap_route_range=64,
+                        cap_route_update=256, cap_rangeq=512,
+                        cap_updq=32768)
+        res = alg.bfs(pg, root, cfg)
+        s = res.stats
+        assert int(s.spills_range + s.spills_update) == 0
+        flits = np.asarray(s.flits_per_link)
+        hist = np.asarray(s.hop_histogram)
+        assert flits.sum() == (hist * np.arange(len(hist))).sum()
+        assert int(s.max_link_occupancy) <= flits.max()
+        if noc == "ideal":
+            assert hist[0] == 0  # every delivery is exactly one hop
+            assert flits.sum() == int(s.msgs_range + s.msgs_update)
+
+
+def test_pressure_reads_own_row_and_column():
+    net = Mesh2D(16, 4, 4, link_cap=4)
+    flits = jnp.zeros((net.num_links,), jnp.int32)
+    # load one X-block link in row 2 and one Y-block link in column 1
+    from repro.noc import N_CHANNELS
+    flits = flits.at[2 * N_CHANNELS * 4 + 3].set(9)       # row 2's line
+    flits = flits.at[N_CHANNELS * 16 + 1 * N_CHANNELS * 4 + 2].set(5)
+    assert int(net.pressure(jnp.int32(2 * 4 + 1), flits)) == 9  # tile (2,1)
+    assert int(net.pressure(jnp.int32(0 * 4 + 1), flits)) == 5  # tile (0,1)
+    assert int(net.pressure(jnp.int32(3 * 4 + 3), flits)) == 0  # tile (3,3)
+
+
+def test_make_network_selects_backend():
+    assert isinstance(make_network(small_cfg(noc="ideal"), 16),
+                      IdealAllToAll)
+    net = make_network(small_cfg(noc="torus", noc_rows=2), 16)
+    assert isinstance(net, Torus2D) and (net.rows, net.cols) == (2, 8)
+    net = make_network(small_cfg(noc="ruche", ruche_factor=3), 16)
+    assert isinstance(net, Ruche) and net.ruche == 3
+    with pytest.raises(ValueError):
+        make_network(small_cfg(noc="hypercube"), 16)

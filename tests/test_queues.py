@@ -8,6 +8,9 @@ The system invariants under test:
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.comm import LocalComm

@@ -51,6 +51,20 @@ SCRIPT = textwrap.dedent("""
     y_spmd = alg.spmv(pg, x, cfg, mesh=mesh)
     np.testing.assert_allclose(y_spmd.values, ref.spmv_ref(g, x), rtol=2e-4,
                                atol=1e-4)
+
+    # physical NoC backends under shard_map: the claims all_gather and the
+    # pressure dynamic_slice must behave identically to the vmap emulation
+    import dataclasses
+    for noc in ("mesh", "torus"):
+        ncfg = dataclasses.replace(cfg, noc=noc, link_cap=2)
+        n_spmd = alg.bfs(pg, root, ncfg, mesh=mesh)
+        n_local = alg.bfs(pg, root, ncfg)
+        np.testing.assert_array_equal(n_spmd.values, n_local.values)
+        assert int(n_spmd.stats.rounds) == int(n_local.stats.rounds)
+        np.testing.assert_array_equal(
+            np.asarray(n_spmd.stats.flits_per_link),
+            np.asarray(n_local.stats.flits_per_link))
+        assert int(n_spmd.stats.drops) == 0
     print("SPMD-OK")
 """)
 
