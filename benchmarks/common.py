@@ -50,13 +50,18 @@ def timed(fn, *args, repeat: int = 1, **kw):
 
 def stats_row(stats) -> dict:
     """Flatten Stats for CSV-ish rows: scalars as ints, telemetry arrays
-    (flits_per_link, hop_histogram) summarized as max/sum."""
+    (flits_per_link, hop_histogram) summarized as max/sum.  The per-channel
+    msgs/spills vectors additionally keep the legacy first/last-channel
+    scalar keys (range/update) that older figure scripts read."""
     out = {}
     for k in stats._fields:
         v = np.asarray(getattr(stats, k))
         if v.ndim == 0:
             out[k] = int(v)
         else:
+            if k in ("msgs", "spills"):
+                out[f"{k}_range"] = int(v[0])
+                out[f"{k}_update"] = int(v[-1])
             out[f"{k}_max"] = int(v.max())
             out[f"{k}_sum"] = int(v.sum())
     return out

@@ -41,8 +41,11 @@ def _sort_by_degree(g):
 
 
 def _static_rows(g, T, tag):
+    """Per-placement endpoint/work balance, incl. the paper's degree-aware
+    rung: ``degree_interleave`` deals hubs round-robin, so its ``work_max``
+    balance beats ``low_order``/``high_order`` even on degree-sorted ids."""
     rows = []
-    for scheme in ("low_order", "high_order"):
+    for scheme in ("low_order", "high_order", "degree_interleave"):
         pg = alg.prepare(g, T, scheme=scheme)
         deg = np.asarray(pg.deg).astype(np.int64)
         dst = np.asarray(pg.edge_dst).reshape(pg.T, -1)

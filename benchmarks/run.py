@@ -16,7 +16,8 @@ def main() -> None:
     fast = "--fast" in sys.argv
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
-                            fig8_noc, lm_micro, roofline, work_efficiency)
+                            fig8_noc, lm_micro, roofline, taskgraphs,
+                            work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -30,6 +31,9 @@ def main() -> None:
                               apps=("bfs",) if fast else ("bfs", "sssp")))
     print("# fig8: placement / NoC balance (paper Fig. 8-9)")
     _emit(fig8_noc.run(scale=8 if fast else 10, T=8 if fast else 16))
+    print("# taskgraphs: new workloads on the generic task-program executor")
+    _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
+                         ks=(2,) if fast else (2, 3, 4)))
     print("# work-efficiency (paper Section V discussion)")
     _emit(work_efficiency.run(scale=8 if fast else 10, T=8 if fast else 16))
     print("# lm-micro: LM substrate microbenches")

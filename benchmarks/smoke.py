@@ -1,0 +1,46 @@
+"""Benchmark smoke runner for CI: tiny-scale figure drivers so benchmark
+code cannot rot unnoticed.
+
+Runs the fig5 optimization ladder plus the new task-graph workloads at
+T=4 / scale=6, asserts the no-drop invariant and the reference checks on
+every row, and writes the rows as JSON (uploaded as a CI artifact).
+
+  PYTHONPATH=src python benchmarks/smoke.py [--out bench-smoke.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench-smoke.json")
+    ap.add_argument("--scale", type=int, default=6)
+    ap.add_argument("--tiles", type=int, default=4)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    from benchmarks import fig5_ablation, taskgraphs
+
+    rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
+    rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
+
+    bad = [r for r in rows if r.get("drops", 0) != 0]
+    bad += [r for r in rows if r.get("ok") is False]
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
+    if bad:
+        print(f"FAILED rows: {bad}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

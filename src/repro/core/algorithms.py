@@ -1,8 +1,14 @@
-"""Host drivers for the five paper workloads on the Dalorex engine.
+"""Host drivers for the paper workloads on the Dalorex engine.
 
-Each driver: (1) initializes per-shard value/frontier state in *placed*
-space, (2) runs the engine (barrierless or BSP) over a comm backend, and
-(3) maps results back to original vertex IDs.
+Each driver: (1) initializes per-shard value/acc/frontier state in *placed*
+space, (2) runs its :class:`repro.core.program.Program` on the generic
+engine (barrierless or BSP) over a comm backend, and (3) maps results back
+to original vertex IDs.
+
+The five seed workloads (BFS, SSSP, PageRank, WCC, SpMV) compile to the
+classic 3-task program; :func:`kcore` runs the peel program (threshold
+fold); :func:`triangles` runs the 4-channel 2-hop chain over a
+vertex-aligned, sorted partition (:func:`prepare_triangles`).
 
 Two execution paths share all engine code:
 
@@ -22,8 +28,10 @@ import numpy as np
 from repro.core.comm import AxisComm, LocalComm, shard_map_compat
 from repro.core.engine import (BFS, PAGERANK, SPMV, SSSP, WCC, AlgSpec,
                                EngineConfig, EngineState, GraphShard, INF,
-                               Stats, init_state, run_engine)
+                               Stats, init_state, run_engine, zero_stats)
 from repro.core.graph import CSRGraph, PartitionedGraph, partition_graph
+from repro.core.program import (TRIANGLES, as_program, kcore_program,
+                                sized_cfg)
 
 
 # --------------------------------------------------------------------------
@@ -66,6 +74,18 @@ def init_add_state(pg: PartitionedGraph, x: np.ndarray):
     return jnp.asarray(value), jnp.asarray(frontier)
 
 
+def init_kcore_state(pg: PartitionedGraph, k: int):
+    """value = remaining degree; acc = removed flag (1 = out of the core);
+    the initially-dead vertices (deg < k, and padding) seed the frontier so
+    their decrements propagate."""
+    real = real_mask(pg)
+    deg = np.asarray(pg.deg)
+    value = np.where(real, deg, 0).astype(np.float32)
+    dead0 = real & (deg < k)
+    acc = np.where(real & ~dead0, 0.0, 1.0).astype(np.float32)
+    return jnp.asarray(value), jnp.asarray(dead0), jnp.asarray(acc)
+
+
 def to_original(pg: PartitionedGraph, arr) -> np.ndarray:
     """(T, v_chunk) placed-space array -> (V,) original order."""
     flat = np.asarray(arr).reshape(-1)
@@ -76,24 +96,27 @@ def to_original(pg: PartitionedGraph, arr) -> np.ndarray:
 # Engine invocation: local emulation and SPMD shard_map.
 # --------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("alg", "cfg", "T", "e_chunk", "v_chunk"))
-def _local_call(alg: AlgSpec, cfg: EngineConfig, T: int, e_chunk: int,
-                v_chunk: int, shard: GraphShard, value, frontier):
+@partial(jax.jit, static_argnames=("prog", "cfg", "T", "e_chunk", "v_chunk"))
+def _local_call(prog, cfg: EngineConfig, T: int, e_chunk: int,
+                v_chunk: int, shard: GraphShard, value, frontier, acc):
     comm = LocalComm(T)
-    st = init_state(comm, cfg, v_chunk, value, frontier)
-    st, stats = run_engine(comm, cfg, alg, shard, st, e_chunk, v_chunk)
+    st = init_state(comm, cfg, v_chunk, value, frontier, prog, acc)
+    st, stats = run_engine(comm, cfg, prog, shard, st, e_chunk, v_chunk)
     return st.value, st.acc, stats
 
 
-def local_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
-                      value, frontier):
+def local_engine_call(pg: PartitionedGraph, alg, cfg: EngineConfig,
+                      value, frontier, acc=None):
+    prog = as_program(alg)
     shard = GraphShard(pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val)
-    return _local_call(alg, cfg, pg.T, pg.e_chunk, pg.v_chunk, shard,
-                       value, frontier)
+    if acc is None:
+        acc = jnp.zeros_like(value)
+    return _local_call(prog, cfg, pg.T, pg.e_chunk, pg.v_chunk, shard,
+                       value, frontier, acc)
 
 
-def spmd_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
-                     value, frontier, mesh, axis: str = "x"):
+def spmd_engine_call(pg: PartitionedGraph, alg, cfg: EngineConfig,
+                     value, frontier, mesh, axis: str = "x", acc=None):
     """Run the engine as true SPMD under shard_map over ``axis`` of ``mesh``.
 
     Arrays keep the (T, chunk) layout; the leading axis is sharded so each
@@ -103,22 +126,27 @@ def spmd_engine_call(pg: PartitionedGraph, alg: AlgSpec, cfg: EngineConfig,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     T = pg.T
+    prog = as_program(alg)
     comm = AxisComm(axis, T)
     spec2 = P(axis, None)
+    if acc is None:
+        acc = jnp.zeros_like(value)
 
-    def body(ptr_start, deg, edge_dst, edge_val, value, frontier):
+    def body(ptr_start, deg, edge_dst, edge_val, value, frontier, acc):
         shard = GraphShard(ptr_start[0], deg[0], edge_dst[0], edge_val[0])
-        st = init_state(comm, cfg, pg.v_chunk, value[0], frontier[0])
-        st, stats = run_engine(comm, cfg, alg, shard, st,
+        st = init_state(comm, cfg, pg.v_chunk, value[0], frontier[0],
+                        prog, acc[0])
+        st, stats = run_engine(comm, cfg, prog, shard, st,
                                pg.e_chunk, pg.v_chunk)
         return st.value[None], st.acc[None], stats
 
     fn = shard_map_compat(
         body, mesh=mesh,
-        in_specs=(spec2,) * 6,
+        in_specs=(spec2,) * 7,
         out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero())))
     args = [jax.device_put(a, NamedSharding(mesh, spec2)) for a in
-            (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val, value, frontier)]
+            (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val, value,
+             frontier, acc)]
     return jax.jit(fn)(*args)
 
 
@@ -133,10 +161,10 @@ class Result:
     epochs: int = 1
 
 
-def _call(pg, alg, cfg, value, frontier, mesh=None, axis="x"):
+def _call(pg, alg, cfg, value, frontier, mesh=None, axis="x", acc=None):
     if mesh is None:
-        return local_engine_call(pg, alg, cfg, value, frontier)
-    return spmd_engine_call(pg, alg, cfg, value, frontier, mesh, axis)
+        return local_engine_call(pg, alg, cfg, value, frontier, acc)
+    return spmd_engine_call(pg, alg, cfg, value, frontier, mesh, axis, acc)
 
 
 def bfs(pg: PartitionedGraph, root: int, cfg: EngineConfig = EngineConfig(),
@@ -186,7 +214,9 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
     real = real_mask(pg)
     deg = np.asarray(pg.deg)
     rank = np.where(real, np.float32(1.0 / V), 0.0).astype(np.float32)
-    total = None  # telemetry shapes depend on the NoC backend
+    # telemetry shapes depend on the NoC backend; a backend-shaped zero is
+    # always safe to accumulate (also the iters == 0 result).
+    total = zero_stats(cfg, pg.T, PAGERANK)
     epochs = 0
     for _ in range(iters):
         frontier = jnp.asarray(real & (deg > 0))
@@ -199,17 +229,90 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
             0.0).astype(np.float32)
         diff = np.abs(new_rank - rank).sum()
         rank = new_rank
-        total = stats if total is None else _acc_stats(total, stats)
+        total = _acc_stats(total, stats)
         epochs += 1
         if tol and diff < tol:
             break
-    if total is None:  # iters == 0
-        total = Stats.zero()
     return Result(to_original(pg, rank).astype(np.float64), total, epochs)
 
 
+def kcore(pg: PartitionedGraph, k: int, cfg: EngineConfig = EngineConfig(),
+          mesh=None) -> Result:
+    """k-core membership by peeling (graph must be symmetric, deduped).
+
+    values[v] = 1 if v survives in the k-core, else 0.  The engine peels
+    asynchronously (or per BSP epoch): removed vertices emit one decrement
+    per edge and the threshold fold re-arms the frontier — the same
+    3-channel shape as BFS with a different T3.
+    """
+    value, frontier, acc = init_kcore_state(pg, k)
+    _, a, stats = _call(pg, kcore_program(int(k)), cfg, value, frontier,
+                        mesh, acc=acc)
+    member = (to_original(pg, a) == 0.0).astype(np.int64)
+    return Result(member, stats)
+
+
+def prepare_triangles(g: CSRGraph, T: int,
+                      scheme: str = "low_order") -> PartitionedGraph:
+    """Partition for triangle counting: vertex-aligned edges (each tile
+    owns its vertices' full adjacency) with every per-vertex segment sorted
+    by placed destination, so the closing-edge check is a local binary
+    search.  ``g`` must be symmetric and deduplicated (use
+    :func:`symmetrize`)."""
+    pg = partition_graph(g, T, scheme, edge_mode="vertex_aligned")
+    dst = np.asarray(pg.edge_dst).copy()
+    val = np.asarray(pg.edge_val).copy()
+    degs = np.asarray(pg.deg)
+    for t in range(pg.T):
+        total = int(degs[t].sum())
+        seg = np.full(pg.e_chunk, np.iinfo(np.int64).max, np.int64)
+        seg[:total] = np.repeat(np.arange(pg.v_chunk), degs[t])
+        order = np.lexsort((dst[t], seg))
+        dst[t] = dst[t][order]
+        val[t] = val[t][order]
+    return dataclasses.replace(pg, edge_dst=jnp.asarray(dst, jnp.int32),
+                               edge_val=jnp.asarray(val, jnp.float32),
+                               sorted_adj=True)
+
+
+def triangles(pg: PartitionedGraph, cfg: EngineConfig = EngineConfig(),
+              mesh=None) -> Result:
+    """2-hop triangle counting on a :func:`prepare_triangles` partition.
+
+    values[v] = number of triangles whose placed-minimum vertex is v
+    (each triangle counted exactly once; ``values.sum()`` is the total).
+    A 4-channel program: range -> wedge at the neighbor's owner -> second
+    range -> intersection-count fold.
+    """
+    # the close fold binary-searches each vertex's local sorted adjacency —
+    # any other partition layout would silently miscount.
+    assert pg.edge_mode == "vertex_aligned" and pg.sorted_adj, (
+        "triangles() needs a prepare_triangles partition (vertex-aligned "
+        f"edges, sorted segments); got edge_mode={pg.edge_mode!r}, "
+        f"sorted_adj={pg.sorted_adj}")
+    cfg = sized_cfg(cfg, TRIANGLES, pg.T)
+    real = real_mask(pg)
+    deg = np.asarray(pg.deg)
+    value = jnp.zeros((pg.T, pg.v_chunk), jnp.float32)
+    frontier = jnp.asarray(real & (deg > 0))
+    _, a, stats = _call(pg, TRIANGLES, cfg, value, frontier, mesh)
+    return Result(to_original(pg, a).astype(np.int64), stats)
+
+
 def _acc_stats(a: Stats, b: Stats) -> Stats:
-    """Combine per-epoch Stats: counters add, peaks take the max."""
+    """Combine per-epoch Stats: counters add, peaks take the max.
+
+    Shape-checked: telemetry arrays are shaped by the NoC backend and the
+    channel counters by the program — accumulating mismatched runs (or a
+    default ``Stats.zero()``) is a bug, not a broadcast.
+    """
+    for name, x, y in zip(Stats._fields, a, b):
+        if jnp.shape(x) != jnp.shape(y):
+            raise ValueError(
+                f"Stats.{name} shape mismatch {jnp.shape(x)} vs "
+                f"{jnp.shape(y)}: accumulating stats from different NoC "
+                f"backends/programs? Use zero_stats(cfg, T, alg) instead "
+                f"of Stats.zero().")
     merged = jax.tree.map(lambda x, y: x + y, a, b)
     return merged._replace(
         max_link_occupancy=jnp.maximum(a.max_link_occupancy,

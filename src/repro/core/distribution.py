@@ -5,13 +5,20 @@ routes task messages by the *global array index* alone (headerless NoC,
 Section III-E): ``owner(i) = i // chunk`` and ``local(i) = i % chunk`` once
 the placement permutation has been applied.
 
-Two placement schemes are provided (the Fig. 5 ``Uniform-distr`` ablation):
+Three placement schemes are provided (the Fig. 5 ``Uniform-distr``
+ablation plus the paper's degree-aware preprocessing rung):
 
 * ``low_order``  — Dalorex: original element ``v`` goes to shard ``v % T``
   (scatter by low-order bits). Consecutive hot vertices land on different
   tiles, balancing work and traffic without preprocessing.
 * ``high_order`` — Tesseract-like: contiguous chunks (``v // chunk``), which
   concentrates hub neighborhoods (and therefore traffic) on few tiles.
+* ``degree_interleave`` — degree-aware: vertices sorted by descending
+  degree are dealt round-robin across tiles, so the T highest-degree hubs
+  land on T *different* tiles.  This is the preprocessing-heavy rung the
+  paper contrasts with low-order bits: it equalizes per-tile *work*
+  (``work_max``) even under adversarial (degree-sorted) vertex ids, at the
+  cost of a host-side sort.  Requires per-vertex degrees (``deg=``).
 
 We realize a scheme as a *permutation into placed-ID space* followed by
 contiguous chunking, which is exactly how the paper builds its global CSR
@@ -53,19 +60,34 @@ class DistSpec:
         return shard * self.chunk + local
 
 
-def placement(n_orig: int, num_shards: int, scheme: str) -> tuple[np.ndarray, np.ndarray]:
+def placement(n_orig: int, num_shards: int, scheme: str,
+              deg: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Return (place, inv) arrays over the padded ID space.
 
     ``place[v]`` is the placed ID of original element ``v``;
     ``inv[p]`` is the original ID at placed slot ``p`` (or -1 for padding).
+    ``deg`` (per-original-element weights) is required by the degree-aware
+    ``degree_interleave`` scheme and ignored otherwise.
     """
     n_pad = padded_len(n_orig, num_shards)
     ids = np.arange(n_pad, dtype=np.int64)
+    chunk = n_pad // num_shards
     if scheme == "low_order":
-        chunk = n_pad // num_shards
         place = (ids % num_shards) * chunk + ids // num_shards
     elif scheme == "high_order":
         place = ids.copy()
+    elif scheme == "degree_interleave":
+        if deg is None:
+            raise ValueError("degree_interleave placement needs deg=")
+        assert len(deg) == n_orig, (len(deg), n_orig)
+        # rank 0 = highest degree; padding ids rank last.  Stable sort keeps
+        # equal-degree vertices in id order (deterministic).
+        order = np.argsort(-np.asarray(deg, np.int64), kind="stable")
+        order = np.concatenate([order, np.arange(n_orig, n_pad)])
+        rank = np.empty(n_pad, np.int64)
+        rank[order] = ids
+        # deal ranks round-robin: rank r -> tile r % T, slot r // T
+        place = (rank % num_shards) * chunk + rank // num_shards
     else:
         raise ValueError(f"unknown placement scheme: {scheme}")
     inv = np.full(n_pad, -1, dtype=np.int64)

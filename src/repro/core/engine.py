@@ -1,52 +1,55 @@
 """The Dalorex execution engine: data-local task-flow over a device grid.
 
-One engine runs all five paper workloads (BFS, SSSP, PageRank, WCC, SpMV).
-Per *round* (the vectorized analogue of a window of machine cycles), every
-device executes the paper's task pipeline on its own shard:
+The engine executes a :class:`repro.core.program.Program` — an ordered chain
+of task channels (the paper's task-based programming model, Section II) —
+one *round* at a time (the vectorized analogue of a window of machine
+cycles).  Per round, every device runs:
 
-  T4/T1  pop local frontier bits  -> edge-range tasks into the range queue
-  T1b    pop range queue          -> bounded range *messages* (split at chunk
-                                     borders and at MAX_T2, Listing 1)
-         --- route by owner(edge_index) over the NoC backend ---
-  T2     scan local edges         -> update messages (neighbor, value)
-         --- route by owner(vertex_index) over the NoC backend ---
-  T3     fold updates into local shard (scatter-min / scatter-add;
-         atomic-free because this device is the only owner), set local
-         frontier bits for improved vertices.
+  source   pop local frontier bits -> channel-0 tasks (the paper's T4/T1
+           head: one (edge_start, edge_end, payload) task per vertex)
+  per channel, in program order (one generic leg each):
+           queue -> TSU budget -> transform (e.g. the T1 range split at
+           chunk borders and MAX_T2, Listing 1)
+           --- route by owner(head flit) over the NoC backend ---
+           handler at the owner tile (edge scan, fold, ...) -> successor
+           messages for the next channel; spills -> local queue.
 
-The fabric between stages is a pluggable :mod:`repro.noc` Network selected
-by ``EngineConfig.noc``: the ideal crossbar (the original semantics), or a
-physical mesh / torus / ruche grid with dimension-ordered routing, per-link
-capacities, and per-link telemetry (``Stats.flits_per_link`` etc.).
+The classic workloads (BFS, SSSP, PageRank, WCC, SpMV) compile to the
+3-task program T1 range split -> T2 edge scan -> T3 fold
+(:func:`repro.core.program.classic_program`); k-core peeling swaps the
+fold; triangle counting runs a 4-channel chain.  The engine itself is
+workload-agnostic: it only iterates channels.
+
+The fabric between channels is a pluggable :mod:`repro.noc` Network
+selected by ``EngineConfig.noc``: the ideal crossbar, or a physical mesh /
+torus / ruche grid with dimension-ordered routing, per-link capacities, and
+per-link telemetry (``Stats.flits_per_link`` etc.).
 
 Backpressure: routing capacity is finite (endpoint slots *and*, for the
-physical NoCs, per-link flits); overflow *spills* back into the local queues
-— of whichever tile the message is stranded at, since routes are re-derived
-from the head flit — and is replayed next round, the software form of the
-paper's "CQ full -> early exit, resume next invocation".  Nothing is ever
-dropped; tests assert the ``drops == 0`` invariant.
+physical NoCs, per-link flits); overflow *spills* back into the channel's
+local queue — of whichever tile the message is stranded at, since routes
+are re-derived from the head flit — and is replayed next round, the
+software form of the paper's "CQ full -> early exit, resume next
+invocation".  Nothing is ever dropped; tests assert ``drops == 0``.
 
-Scheduling: per-round budgets are chosen per device from queue occupancies —
-the Task Scheduling Unit's traffic-aware priorities (Section III-E), adapted
-from per-cycle arbitration to per-round budget allocation:
+Scheduling: per-round budgets are chosen per device by a generic arbiter
+over the N channel queue occupancies plus the NoC's fed-back link occupancy
+— the Task Scheduling Unit's traffic-aware priorities (Section III-E),
+adapted from per-cycle arbitration to per-round budget allocation.  The
+drain-consumers-first / throttle-producers ordering falls out of the
+channel DAG: the deepest consumer always drains in full, and a channel's
+budget is quartered while any *downstream* queue (or the fabric) is
+congested; the frontier source stops entirely.  ``policy="static"``
+reproduces the paper's round-robin arbitration rung of the Fig. 5 ablation.
 
-  * drain the update queue first (its IQ filling up is the main source of
-    end-point contention),
-  * throttle range-message production while the update path is congested
-    (keep consumer IQs from overflowing),
-  * stop popping the frontier while the range queue is backed up (keep OQs
-    non-empty but bounded).
-
-``policy="static"`` reproduces the paper's round-robin/static arbitration
-rung of the Fig. 5 ablation.
-
-Synchronization: ``mode="async"`` is barrierless Dalorex — improved vertices
-re-enter the *live* frontier immediately.  ``mode="bsp"`` defers them to a
-next-epoch frontier that is swapped in only when the whole grid is quiescent
-(the paper's per-epoch global barrier, driven by the same idle signal).
+Synchronization: ``mode="async"`` is barrierless Dalorex — vertices
+re-armed by a fold re-enter the *live* frontier immediately.  ``mode="bsp"``
+defers them to a next-epoch frontier swapped in only when the whole grid is
+quiescent (the paper's per-epoch global barrier, driven by the same idle
+signal).
 
 Termination is the paper's hierarchical idle wire: a psum of local pending
-work (queue occupancy + frontier population); the loop exits when it hits
+work (queue occupancies + frontier population); the loop exits when it hits
 zero.  The whole traversal runs inside ONE ``lax.while_loop`` — on real
 meshes there is no host round-trip per round.
 """
@@ -61,50 +64,12 @@ import numpy as np
 
 from repro.core.comm import AxisComm, LocalComm
 from repro.core.graph import PartitionedGraph
+from repro.core.program import (BFS, PAGERANK, SPMV, SSSP,  # noqa: F401
+                                WCC, AlgSpec, Ctx, INF, Program, TaskSpec,
+                                as_program)
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
 from repro.noc import make_network
-
-
-# --------------------------------------------------------------------------
-# Algorithm specifications: the paper's T1/T2/T3 payload semantics.
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class AlgSpec:
-    """How values flow through the task pipeline.
-
-    ``emit``   — T2's payload: f(parent_value, edge_value) for a neighbor.
-    ``kind``   — T3's fold: "min" (relaxation; improvements re-enter the
-                 frontier) or "add" (accumulation into ``acc``; single epoch).
-    ``parent`` — what T1 loads from the local shard for a frontier vertex.
-    """
-
-    name: str
-    kind: str  # "min" | "add"
-    emit: str  # "plus1" | "plus_w" | "copy" | "times_w"
-    parent: str = "value"  # "value" | "value_over_deg"
-
-
-BFS = AlgSpec("bfs", "min", "plus1")
-SSSP = AlgSpec("sssp", "min", "plus_w")
-WCC = AlgSpec("wcc", "min", "copy")
-PAGERANK = AlgSpec("pagerank", "add", "copy", parent="value_over_deg")
-SPMV = AlgSpec("spmv", "add", "times_w")
-
-INF = jnp.float32(np.finfo(np.float32).max)
-
-
-def _emit(alg: AlgSpec, parent: jax.Array, w: jax.Array) -> jax.Array:
-    if alg.emit == "plus1":
-        return parent + 1.0
-    if alg.emit == "plus_w":
-        return parent + w
-    if alg.emit == "copy":
-        return parent
-    if alg.emit == "times_w":
-        return parent * w
-    raise ValueError(alg.emit)
 
 
 # --------------------------------------------------------------------------
@@ -118,17 +83,19 @@ class EngineConfig:
     The queue/budget names mirror the paper:  ``cap_route_*`` are the channel
     queue (CQ) capacities *per destination*, ``max_t2`` is Listing 1's MAX_T2
     (edge-scan length bound per message), the ``*_pop`` budgets are the TSU's
-    per-invocation drain amounts.
+    per-invocation drain amounts.  These are the *defaults* for a Program's
+    channels, selected by each TaskSpec's ``knobs`` tag ("range" /
+    "update"); a TaskSpec can override them per channel.
     """
 
     f_pop: int = 32          # frontier bits popped per round (T4 drain)
-    r_pop: int = 32          # range-queue entries popped per round (T1 drain)
-    u_pop: int = 64          # spilled updates replayed per round
+    r_pop: int = 32          # "range"-knob queue entries popped per round
+    u_pop: int = 64          # "update"-knob spilled entries replayed
     max_t2: int = 32         # edge-scan bound per range message (MAX_T2)
-    cap_route_range: int = 16    # CQ1: range-message slots per destination
-    cap_route_update: int = 64   # CQ2: update-message slots per destination
-    cap_rangeq: int = 2048   # local range-queue capacity (IQ1)
-    cap_updq: int = 16384    # local spilled-update queue capacity
+    cap_route_range: int = 16    # CQ slots per destination, "range" channels
+    cap_route_update: int = 64   # CQ slots per destination, "update" channels
+    cap_rangeq: int = 2048   # local task-queue capacity, "range" channels
+    cap_updq: int = 16384    # local spill-queue capacity, "update" channels
     policy: str = "traffic"  # "traffic" | "static"
     mode: str = "async"      # "async" (barrierless) | "bsp"
     max_rounds: int = 100_000
@@ -136,19 +103,14 @@ class EngineConfig:
     noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche"
     noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
     link_cap: int = 0        # flits per directed link per routing leg (a
-                             # round has two legs: range + update); 0 = off
+                             # round has one leg per channel); 0 = off
     ruche_factor: int = 2    # tiles skipped by a ruche channel (noc="ruche")
 
     def min_caps(self, T: int) -> tuple[int, int]:
-        """Worst-case per-round queue inflow: (rangeq_need, updq_need).
-
-        T2 output volume bounds the updq burst; physical NoCs additionally
-        spill mid-route messages into the *waypoint* tile's queues, so a
-        worst-case concentrated round (every inbound slot of both legs
-        spilling here, plus this tile's own T1 remainder and source-spill
-        re-pushes) must fit.  Sizing helpers and :meth:`validate` share
-        these formulas — keep them in one place.
-        """
+        """Worst-case per-round queue inflow for the *classic* program
+        shape: (rangeq_need, updq_need).  The generic, per-channel version
+        is :meth:`repro.core.program.Program.min_caps`; this closed form is
+        kept because benchmarks size their queues from it."""
         burst = T * self.cap_route_range * self.max_t2 + self.u_pop
         rangeq_need = 2 * self.f_pop
         if self.noc != "ideal":
@@ -167,24 +129,21 @@ class EngineConfig:
 
 
 class EngineState(NamedTuple):
-    value: jax.Array      # (v_chunk,) f32 — dist / label / rank / x
-    acc: jax.Array        # (v_chunk,) f32 — "add" accumulator (y / rank acc)
+    value: jax.Array      # (v_chunk,) f32 — dist / label / rank / x / degree
+    acc: jax.Array        # (v_chunk,) f32 — accumulator / removed flag
     frontier: jax.Array   # (v_chunk,) bool — local bitmap frontier (live)
     next_frontier: jax.Array  # (v_chunk,) bool — BSP-deferred frontier
-    rangeq: Queue         # pending edge-range tasks (start, end, parent_bits)
-    updq: Queue           # spilled update messages (neighbor, value_bits)
+    queues: tuple         # one Queue per program channel
     net_pressure: jax.Array  # () i32 — last round's occupancy on own links
 
 
 class Stats(NamedTuple):
     rounds: jax.Array
-    epochs: jax.Array           # BSP frontier swaps (1 in async mode)
-    msgs_range: jax.Array       # range messages sent over the network
-    msgs_update: jax.Array      # update messages sent over the network
-    spills_range: jax.Array
-    spills_update: jax.Array
-    edges_scanned: jax.Array    # T2 work (== edges relaxed incl. replays)
-    updates_applied: jax.Array  # valid T3 folds
+    epochs: jax.Array           # BSP frontier swaps (0 in async mode)
+    msgs: jax.Array             # (K,) messages delivered per task channel
+    spills: jax.Array           # (K,) spill-and-replay events per channel
+    edges_scanned: jax.Array    # work of "edges"-tagged handlers (scans)
+    updates_applied: jax.Array  # work of "updates"-tagged handlers (folds)
     drops: jax.Array            # MUST be 0 — backpressure invariant
     work_max: jax.Array         # max per-device edges_scanned (balance)
     # --- NoC telemetry (shapes fixed by the Network backend) ---
@@ -192,12 +151,41 @@ class Stats(NamedTuple):
     max_link_occupancy: jax.Array   # () peak per-round per-link occupancy
     hop_histogram: jax.Array        # (max_hops+1,) injections by hop count
 
+    # Legacy scalar views: the classic program's two channels.
+    @property
+    def msgs_range(self):
+        return self.msgs[..., 0]
+
+    @property
+    def msgs_update(self):
+        return self.msgs[..., -1]
+
+    @property
+    def spills_range(self):
+        return self.spills[..., 0]
+
+    @property
+    def spills_update(self):
+        return self.spills[..., -1]
+
     @staticmethod
-    def zero(num_links: int = 1, max_hops: int = 1):
+    def zero(num_links: int = 1, max_hops: int = 1, num_channels: int = 2):
         z = jnp.zeros((), jnp.int32)
-        return Stats(z, z, z, z, z, z, z, z, z, z,
+        return Stats(z, z,
+                     jnp.zeros((num_channels,), jnp.int32),
+                     jnp.zeros((num_channels,), jnp.int32),
+                     z, z, z, z,
                      jnp.zeros((num_links,), jnp.int32), z,
                      jnp.zeros((max_hops + 1,), jnp.int32))
+
+
+def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
+    """A Stats zero whose telemetry shapes match the NoC backend ``cfg``
+    selects and whose channel counters match the program — safe to
+    accumulate with real runs (the ``Stats.zero()`` defaults are not)."""
+    prog = as_program(alg)
+    net = make_network(cfg, T)
+    return Stats.zero(net.num_links, net.max_hops, len(prog.channels))
 
 
 class GraphShard(NamedTuple):
@@ -209,143 +197,62 @@ class GraphShard(NamedTuple):
 
 
 # --------------------------------------------------------------------------
-# Per-device pipeline stages (pure; run under comm.run -> vmap or shard_map).
+# The TSU: a generic arbiter over N channel occupancies + fabric pressure.
 # --------------------------------------------------------------------------
 
-def _budgets(cfg: EngineConfig, st: EngineState, plimit: int):
-    """The TSU: per-round budgets from queue occupancies AND link occupancy
-    (Section III-E).  Queue counts expose endpoint congestion; the NoC's
-    per-link occupancy from the previous round (``st.net_pressure``, fed
-    back by the Network backend) exposes fabric congestion — a hot link on
-    this tile's row/column throttles producers exactly like a filling IQ.
-    ``plimit`` is the backend's own hot threshold (``net.pressure_limit``).
+def _budgets(cfg: EngineConfig, prog: Program, qcaps, pops, st: EngineState,
+             plimit: int):
+    """Per-round budgets from the channel queue occupancies AND the NoC's
+    per-link occupancy fed back from last round (Section III-E).
+
+    Priorities derive from the program DAG: the deepest consumer always
+    drains (its IQ filling up is the main source of endpoint contention);
+    a producer channel is throttled to 1/4 budget while any *downstream*
+    queue is congested (> 3/4 full) or the fabric is hot; the frontier
+    source stops entirely while channel 0 is half full or anything
+    downstream is congested.  Returns (source_budget, (K,) channel pops).
     """
-    rq_free = jnp.int32(cfg.cap_rangeq) - st.rangeq.count
+    K = len(prog.channels)
+    occ = [st.queues[i].count for i in range(K)]
+    free0 = jnp.int32(qcaps[0]) - occ[0]
     if cfg.policy == "static":
-        f_pop = jnp.minimum(jnp.int32(cfg.f_pop), jnp.maximum(rq_free, 0))
-        r_pop = jnp.int32(cfg.r_pop)
-        u_pop = jnp.int32(cfg.u_pop)
-        return f_pop, r_pop, u_pop
-    # traffic-aware: high priority = drain a nearly-full IQ; medium = feed a
-    # nearly-empty OQ; throttle producers of congested consumers.
+        f_pop = jnp.minimum(jnp.int32(cfg.f_pop), jnp.maximum(free0, 0))
+        return f_pop, jnp.stack([jnp.int32(p) for p in pops])
     net_hot = st.net_pressure > jnp.int32(max(plimit, 1))
-    upd_congested = st.updq.count > (3 * cfg.cap_updq) // 4
-    rng_congested = st.rangeq.count > cfg.cap_rangeq // 2
-    u_pop = jnp.int32(cfg.u_pop)  # always drain updates first
-    r_pop = jnp.where(upd_congested | net_hot, jnp.int32(cfg.r_pop // 4),
-                      jnp.int32(cfg.r_pop))
-    f_pop = jnp.where(rng_congested | upd_congested | net_hot, jnp.int32(0),
-                      jnp.minimum(jnp.int32(cfg.f_pop),
-                                  jnp.maximum(rq_free - 2 * cfg.f_pop, 0)))
-    return f_pop, r_pop, u_pop
-
-
-def _take_first_k(mask: jax.Array, k: jax.Array, k_max: int):
-    """Indices of the first ``min(k, popcount)`` set bits, FIFO by position.
-
-    Returns (idx (k_max,) i32, valid (k_max,) bool, cleared_mask)."""
-    n = mask.shape[0]
-    ar = jnp.arange(n, dtype=jnp.int32)
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
-    take = mask & (rank < k)
-    key = jnp.where(take, rank, jnp.int32(n) + ar)
-    order = jnp.argsort(key)[:k_max]
-    valid = take[order]
-    return order.astype(jnp.int32), valid, mask & ~take
-
-
-def _stage_a(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
-             sh: GraphShard, st: EngineState, plimit: int):
-    """T4 + T1: frontier -> range queue -> bounded range messages."""
-    f_pop, r_pop, _ = _budgets(cfg, st, plimit)
-
-    # T4: pop up to f_pop frontier vertices (paper: bitmap scan via IQ4).
-    vidx, vvalid, frontier = _take_first_k(st.frontier, f_pop, cfg.f_pop)
-    deg = sh.deg[vidx]
-    start = sh.ptr_start[vidx]
-    if alg.parent == "value_over_deg":
-        parent = st.value[vidx] / jnp.maximum(deg, 1).astype(jnp.float32)
-    else:
-        parent = st.value[vidx]
-    vvalid = vvalid & (deg > 0)
-    rows = jnp.stack([start, start + deg, f2i(parent)], axis=1)
-    rangeq, d0 = queue_push(st.rangeq, rows, vvalid)
-
-    # T1: pop ranges; emit one bounded message each; push back the remainder.
-    taken, tvalid, rangeq = queue_take_front(rangeq, r_pop, cfg.r_pop)
-    t_start, t_end, t_pb = taken[:, 0], taken[:, 1], taken[:, 2]
-    boundary = (t_start // e_chunk + 1) * e_chunk
-    stop = jnp.minimum(jnp.minimum(t_end, boundary), t_start + cfg.max_t2)
-    msgs = jnp.stack([t_start, stop, t_pb], axis=1)
-    rem = jnp.stack([stop, t_end, t_pb], axis=1)
-    rangeq, d1 = queue_push(rangeq, rem, tvalid & (stop < t_end))
-
-    st = st._replace(frontier=frontier, rangeq=rangeq)
-    return st, msgs, tvalid, d0 + d1
-
-
-def _stage_b(me, cfg: EngineConfig, alg: AlgSpec, e_chunk: int, v_chunk: int,
-             sh: GraphShard, st: EngineState, recv, recv_valid,
-             spill, spill_valid, plimit: int):
-    """T2: scan local edges for each received range message; emit updates.
-
-    Also replays spilled range messages (back into the range queue) and pops
-    previously spilled updates so they are retried ahead of fresh traffic.
-    """
-    rangeq, d0 = queue_push(st.rangeq, spill, spill_valid)
-
-    r_start, r_stop, r_pb = recv[:, 0], recv[:, 1], recv[:, 2]
-    length = jnp.where(recv_valid, r_stop - r_start, 0)
-    local0 = jnp.where(recv_valid, r_start % e_chunk, 0)
-    j = jnp.arange(cfg.max_t2, dtype=jnp.int32)[None, :]
-    eidx = local0[:, None] + j                      # (R, MAX_T2)
-    jvalid = recv_valid[:, None] & (j < length[:, None])
-    eidx_c = jnp.minimum(eidx, e_chunk - 1)
-    nb = sh.edge_dst[eidx_c]
-    w = sh.edge_val[eidx_c]
-    jvalid = jvalid & (nb >= 0)
-    out = jnp.broadcast_to(_emit(alg, i2f(r_pb)[:, None], w), nb.shape)
-    fresh = jnp.stack([nb.reshape(-1), f2i(out).reshape(-1)], axis=1)
-    fresh_valid = jvalid.reshape(-1)
-    edges = jvalid.sum(dtype=jnp.int32)
-
-    _, _, u_pop = _budgets(cfg, st, plimit)
-    replay, replay_valid, updq = queue_take_front(st.updq, u_pop, cfg.u_pop)
-    upd = jnp.concatenate([replay, fresh], axis=0)
-    uvalid = jnp.concatenate([replay_valid, fresh_valid], axis=0)
-
-    st = st._replace(rangeq=rangeq, updq=updq)
-    return st, upd, uvalid, edges, d0
-
-
-def _stage_c(me, cfg: EngineConfig, alg: AlgSpec, v_chunk: int,
-             st: EngineState, recv, recv_valid, spill, spill_valid):
-    """T3: fold received updates into the local shard; grow the frontier."""
-    updq, d0 = queue_push(st.updq, spill, spill_valid)
-
-    nb, vb = recv[:, 0], recv[:, 1]
-    lidx = jnp.where(recv_valid, nb % v_chunk, v_chunk)  # pad -> trash slot
-    val = i2f(vb)
-    applied = recv_valid.sum(dtype=jnp.int32)
-    if alg.kind == "min":
-        ext = jnp.concatenate([st.value, jnp.full((1,), INF, jnp.float32)])
-        after = ext.at[lidx].min(jnp.where(recv_valid, val, INF))[:v_chunk]
-        improved = after < st.value
-        if cfg.mode == "async":
-            st = st._replace(value=after, frontier=st.frontier | improved)
+    congested = [occ[i] > (3 * qcaps[i]) // 4 for i in range(K)]
+    chan_pops = [None] * K
+    down = jnp.zeros((), bool)          # any congested queue downstream
+    for i in reversed(range(K)):
+        if i == K - 1:
+            chan_pops[i] = jnp.int32(pops[i])
         else:
-            st = st._replace(value=after,
-                             next_frontier=st.next_frontier | improved)
-    else:  # add
-        ext = jnp.concatenate([st.acc, jnp.zeros((1,), jnp.float32)])
-        acc = ext.at[lidx].add(jnp.where(recv_valid, val, 0.0))[:v_chunk]
-        st = st._replace(acc=acc)
-    return st._replace(updq=updq), applied, d0
+            # classic 2-channel shape: quarter the producer (the paper's
+            # throttle rung).  Deeper chains amplify (each channel fans out
+            # again), so a quartered producer can still outrun the last
+            # channel's drain — stop producers outright until the backlog
+            # clears; the last channel always drains, so this cannot
+            # deadlock.
+            throttled = pops[i] // 4 if K == 2 else 0
+            chan_pops[i] = jnp.where(down | net_hot,
+                                     jnp.int32(throttled),
+                                     jnp.int32(pops[i]))
+        down = down | congested[i]
+    down_of_source = net_hot
+    for i in range(1, K):
+        down_of_source = down_of_source | congested[i]
+    half0 = occ[0] > qcaps[0] // 2
+    f_pop = jnp.where(
+        half0 | down_of_source, jnp.int32(0),
+        jnp.minimum(jnp.int32(cfg.f_pop),
+                    jnp.maximum(free0 - 2 * cfg.f_pop, 0)))
+    return f_pop, jnp.stack(chan_pops)
 
 
 def _pending(me, st: EngineState):
-    return (st.rangeq.count + st.updq.count
-            + st.frontier.sum(dtype=jnp.int32))
+    p = st.frontier.sum(dtype=jnp.int32)
+    for q in st.queues:
+        p = p + q.count
+    return p
 
 
 def _next_pending(me, st: EngineState):
@@ -359,49 +266,112 @@ def _bsp_swap(me, st: EngineState, do_swap):
     return st._replace(frontier=frontier, next_frontier=nxt)
 
 
+def _set_queue(st: EngineState, i: int, q: Queue) -> EngineState:
+    return st._replace(queues=st.queues[:i] + (q,) + st.queues[i + 1:])
+
+
 # --------------------------------------------------------------------------
-# The round + driver, parametric over the comm backend.
+# The generic round + driver, parametric over the comm backend.
 # --------------------------------------------------------------------------
 
-def make_round(comm, net, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
+def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
                v_chunk: int, shard: GraphShard):
     """Build the per-round function (state, stats) -> (state, stats, pending).
 
-    ``net`` is a :mod:`repro.noc` Network backend; both routing legs go
-    through it, with the destination decoded from the head flit (the
-    paper's headerless routing) — range messages are owned by the tile
-    holding the edge chunk, updates by the tile owning the vertex.
+    One generic ``queue -> budget -> transform -> net.route -> handler ->
+    spill`` leg per program channel, with the destination decoded from the
+    head flit (the paper's headerless routing).  ``net`` is a
+    :mod:`repro.noc` Network backend; every leg goes through it.
     """
+    ctx = Ctx(cfg, comm.size, e_chunk, v_chunk)
+    chans = prog.channels
+    K = len(chans)
+    caps = tuple(ch.route_cap(cfg) for ch in chans)
+    pops = tuple(ch.pop_budget(cfg) for ch in chans)
+    qcaps = tuple(ch.qcap(cfg) for ch in chans)
+    owners = tuple(ch.owner_fn(ctx) for ch in chans)
+    plimit = net.pressure_limit(cfg, caps)
 
-    plimit = net.pressure_limit(cfg)
+    def ingest(i, st, rows, valid, pop_i):
+        """Feed fresh rows into channel i and produce its network messages.
 
-    def stage_a(me, sh, st):
-        return _stage_a(me, cfg, alg, e_chunk, sh, st, plimit)
+        Queued channels (real task queues) push fresh tasks, pop up to the
+        budget, and bound each popped task via the channel transform
+        (re-pushing remainders).  Spill-only channels replay their backlog
+        ahead of the fresh messages.
+        """
+        q = st.queues[i]
+        if chans[i].queued:
+            q, d0 = queue_push(q, rows, valid)
+            taken, tvalid, q = queue_take_front(q, pop_i, pops[i])
+            msgs, mvalid, rem, remv = chans[i].transform(ctx, taken, tvalid)
+            q, d1 = queue_push(q, rem, remv)
+            drops = d0 + d1
+        else:
+            replay, rvalid, q = queue_take_front(q, pop_i, pops[i])
+            msgs = jnp.concatenate([replay, rows], axis=0)
+            mvalid = jnp.concatenate([rvalid, valid], axis=0)
+            drops = jnp.zeros((), jnp.int32)
+        return _set_queue(st, i, q), msgs, mvalid, drops
 
-    def stage_b(me, sh, st, recv, rv, sp, spv):
-        return _stage_b(me, cfg, alg, e_chunk, v_chunk, sh, st, recv, rv,
-                        sp, spv, plimit)
+    def stage_first(me, sh, st):
+        f_pop, dyn_pops = _budgets(cfg, prog, qcaps, pops, st, plimit)
+        st, rows, valid = prog.source(ctx, me, sh, st, f_pop)
+        st, msgs, mvalid, drops = ingest(0, st, rows, valid, dyn_pops[0])
+        return st, msgs, mvalid, drops, dyn_pops
 
-    def stage_c(me, st, recv, rv, sp, spv):
-        return _stage_c(me, cfg, alg, v_chunk, st, recv, rv, sp, spv)
+    def make_mid(i):
+        def stage(me, sh, st, recv, rv, sp, spv, dyn_pops):
+            q, d0 = queue_push(st.queues[i - 1], sp, spv)
+            st = _set_queue(st, i - 1, q)
+            st, rows, valid, work = chans[i - 1].handler(
+                ctx, me, sh, st, recv, rv)
+            st, msgs, mvalid, d1 = ingest(i, st, rows, valid, dyn_pops[i])
+            return st, msgs, mvalid, d0 + d1, work
+        return stage
+
+    def stage_last(me, sh, st, recv, rv, sp, spv):
+        q, d0 = queue_push(st.queues[K - 1], sp, spv)
+        st = _set_queue(st, K - 1, q)
+        st, _, _, work = chans[K - 1].handler(ctx, me, sh, st, recv, rv)
+        return st, d0, work
 
     def rnd(st: EngineState, stats: Stats):
-        st, msgs, mvalid, drop_a = comm.run(stage_a, shard, st)
-        routed = net.route(comm, msgs, mvalid, cfg.cap_route_range,
-                           lambda m: m[..., 0] // e_chunk)
-        st, upd, uvalid, edges, drop_b = comm.run(
-            stage_b, shard, st, routed.recv, routed.recv_valid,
-            routed.spill, routed.spill_valid)
-        routed2 = net.route(comm, upd, uvalid, cfg.cap_route_update,
-                            lambda m: m[..., 0] // v_chunk)
-        st, applied, drop_c = comm.run(
-            stage_c, st, routed2.recv, routed2.recv_valid,
-            routed2.spill, routed2.spill_valid)
+        st, msgs, mvalid, drops, dyn_pops = comm.run(stage_first, shard, st)
+        routed = net.route(comm, msgs, mvalid, caps[0], owners[0])
+        link_round = routed.link_flits
+        hop_round = routed.hop_hist
+        sents = [routed.sent]
+        spillv = [routed.spill_valid]
+        edges = jnp.zeros_like(drops)
+        applied = jnp.zeros_like(drops)
+        for i in range(1, K):
+            st, msgs, mvalid, d, work = comm.run(
+                make_mid(i), shard, st, routed.recv, routed.recv_valid,
+                routed.spill, routed.spill_valid, dyn_pops)
+            drops = drops + d
+            if chans[i - 1].work == "edges":
+                edges = edges + work
+            elif chans[i - 1].work == "updates":
+                applied = applied + work
+            routed = net.route(comm, msgs, mvalid, caps[i], owners[i])
+            link_round = link_round + routed.link_flits
+            hop_round = hop_round + routed.hop_hist
+            sents.append(routed.sent)
+            spillv.append(routed.spill_valid)
+        st, d, work = comm.run(stage_last, shard, st, routed.recv,
+                               routed.recv_valid, routed.spill,
+                               routed.spill_valid)
+        drops = drops + d
+        if chans[K - 1].work == "edges":
+            edges = edges + work
+        elif chans[K - 1].work == "updates":
+            applied = applied + work
 
         # NoC telemetry: global per-link occupancy of this round, and the
         # per-tile pressure fed back into next round's TSU budgets.
-        link_round = comm.psum(routed.link_flits + routed2.link_flits)
-        hop_round = comm.psum(routed.hop_hist + routed2.hop_hist)
+        link_round = comm.psum(link_round)
+        hop_round = comm.psum(hop_round)
         st = st._replace(net_pressure=comm.run(
             lambda me, lf: net.pressure(me, lf), link_round))
 
@@ -415,27 +385,23 @@ def make_round(comm, net, cfg: EngineConfig, alg: AlgSpec, e_chunk: int,
         else:
             epochs_inc = jnp.zeros_like(pending)
 
-        spills_r = comm.psum(comm.run(
-            lambda me, v: v.sum(dtype=jnp.int32), routed.spill_valid))
-        spills_u = comm.psum(comm.run(
-            lambda me, v: v.sum(dtype=jnp.int32), routed2.spill_valid))
-        drops = comm.psum(drop_a + drop_b + drop_c)
-        edges_t = comm.psum(edges)
-        edges_m = comm.pmax(edges)
         glob = comm.to_global
+        msgs_vec = jnp.stack([glob(comm.psum(s)) for s in sents])
+        spills_vec = jnp.stack([
+            glob(comm.psum(comm.run(
+                lambda me, v: v.sum(dtype=jnp.int32), sv)))
+            for sv in spillv])
         link_g = glob(link_round)
         stats = Stats(
             rounds=stats.rounds + 1,
             epochs=stats.epochs + glob(epochs_inc),
-            msgs_range=stats.msgs_range + glob(comm.psum(routed.sent)),
-            msgs_update=stats.msgs_update + glob(comm.psum(routed2.sent)),
-            spills_range=stats.spills_range + glob(spills_r),
-            spills_update=stats.spills_update + glob(spills_u),
-            edges_scanned=stats.edges_scanned + glob(edges_t),
+            msgs=stats.msgs + msgs_vec,
+            spills=stats.spills + spills_vec,
+            edges_scanned=stats.edges_scanned + glob(comm.psum(edges)),
             updates_applied=stats.updates_applied
             + glob(comm.psum(applied)),
-            drops=stats.drops + glob(drops),
-            work_max=stats.work_max + glob(edges_m),
+            drops=stats.drops + glob(comm.psum(drops)),
+            work_max=stats.work_max + glob(comm.pmax(edges)),
             flits_per_link=stats.flits_per_link + link_g,
             max_link_occupancy=jnp.maximum(stats.max_link_occupancy,
                                            link_g.max()),
@@ -453,9 +419,11 @@ def _bcast(comm, x):
     return x
 
 
-def init_state(comm, cfg: EngineConfig, v_chunk: int,
-               value, frontier) -> EngineState:
-    """value/frontier: (T, v_chunk) under LocalComm, (v_chunk,) under Axis."""
+def init_state(comm, cfg: EngineConfig, v_chunk: int, value, frontier,
+               alg=BFS, acc=None) -> EngineState:
+    """value/frontier/acc: (T, v_chunk) under LocalComm, (v_chunk,) under
+    Axis.  ``alg`` (AlgSpec or Program) fixes the channel queue shapes."""
+    prog = as_program(alg)
     lead = (comm.size,) if isinstance(comm, LocalComm) else ()
 
     def mk_queue(cap, w):
@@ -465,23 +433,30 @@ def init_state(comm, cfg: EngineConfig, v_chunk: int,
                          jnp.broadcast_to(q.count, lead))
         return q
 
+    if acc is None:
+        acc = jnp.zeros(lead + (v_chunk,), jnp.float32)
     return EngineState(
         value=value,
-        acc=jnp.zeros(lead + (v_chunk,), jnp.float32),
+        acc=acc,
         frontier=frontier,
         next_frontier=jnp.zeros(lead + (v_chunk,), bool),
-        rangeq=mk_queue(cfg.cap_rangeq, 3),
-        updq=mk_queue(cfg.cap_updq, 2),
+        queues=tuple(mk_queue(ch.qcap(cfg), ch.width)
+                     for ch in prog.channels),
         net_pressure=jnp.zeros(lead, jnp.int32),
     )
 
 
-def run_engine(comm, cfg: EngineConfig, alg: AlgSpec, shard: GraphShard,
+def run_engine(comm, cfg: EngineConfig, alg, shard: GraphShard,
                st: EngineState, e_chunk: int, v_chunk: int):
-    """Run rounds until the global idle signal fires (or max_rounds)."""
-    cfg.validate(comm.size)
+    """Run rounds until the global idle signal fires (or max_rounds).
+
+    ``alg`` is an AlgSpec (compiled via ``classic_program``) or any
+    :class:`repro.core.program.Program`.
+    """
+    prog = as_program(alg)
+    prog.validate(cfg, comm.size)
     net = make_network(cfg, comm.size)
-    rnd = make_round(comm, net, cfg, alg, e_chunk, v_chunk, shard)
+    rnd = make_round(comm, net, cfg, prog, e_chunk, v_chunk, shard)
 
     def cond(carry):
         _, _, pending, r = carry
@@ -494,6 +469,7 @@ def run_engine(comm, cfg: EngineConfig, alg: AlgSpec, shard: GraphShard,
 
     pending0 = comm.to_global(comm.psum(comm.run(_pending, st)))
     st, stats, _, _ = jax.lax.while_loop(
-        cond, body, (st, Stats.zero(net.num_links, net.max_hops), pending0,
-                     jnp.int32(0)))
+        cond, body,
+        (st, Stats.zero(net.num_links, net.max_hops, len(prog.channels)),
+         pending0, jnp.int32(0)))
     return st, stats

@@ -2,9 +2,13 @@
 
 A graph arrives as host-side CSR (numpy). Partitioning applies a placement
 permutation to vertex IDs (``low_order`` = Dalorex scatter, ``high_order`` =
-Tesseract-like chunks), rebuilds the CSR in placed order, and splits the four
-dataset arrays (``ptr``-derived start/degree, ``edge_dst``, ``edge_val``) in
-equal chunks across T shards, exactly as Section III-A prescribes.
+Tesseract-like chunks, ``degree_interleave`` = degree-aware round-robin),
+rebuilds the CSR in placed order, and splits the four dataset arrays
+(``ptr``-derived start/degree, ``edge_dst``, ``edge_val``) in equal chunks
+across T shards, exactly as Section III-A prescribes.  The rebuild is pure
+numpy segment arithmetic (repeat/cumsum gathers, no per-vertex Python
+loop), so scale-14+ graphs partition in fractions of a second rather than
+minutes.
 
 Two edge-partition modes reproduce the Fig. 5 "Data-Local" ablation rung:
 
@@ -76,6 +80,8 @@ class PartitionedGraph:
     inv: np.ndarray  # (V_pad,) placed -> original (-1 pad)
     num_vertices: int  # original V
     num_edges: int  # original E
+    edge_mode: str = "equal_edges"  # how edges were partitioned
+    sorted_adj: bool = False  # per-vertex segments sorted by placed dst
 
     @property
     def v_chunk(self) -> int:
@@ -89,7 +95,8 @@ class PartitionedGraph:
 def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
                     edge_mode: str = "equal_edges") -> PartitionedGraph:
     V, E = g.num_vertices, g.num_edges
-    place, inv = placement(V, T, scheme)
+    deg = g.ptr[1:] - g.ptr[:-1] if scheme == "degree_interleave" else None
+    place, inv = placement(V, T, scheme, deg=deg)
     v_pad = len(inv)
     vdist = DistSpec(v_pad, T)
 
@@ -98,39 +105,45 @@ def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
     orig_ok = inv >= 0
     deg_placed[orig_ok] = (g.ptr[1:] - g.ptr[:-1])[inv[orig_ok]]
 
+    # Both modes gather the edge arrays with numpy segment ops (repeat +
+    # cumsum) instead of a per-vertex Python loop: placed slot p's edges
+    # come from g.ptr[inv[p]] + (0..deg) and land at ptr_start[p] + (0..deg).
+    # Timing note: the old O(V) host loop took minutes on scale-14+ RMATs
+    # (~16k vertices/chunk x T); the segment gather partitions a scale-16
+    # graph (65k vertices, 650k edges) in well under a second.
+    ok_p = np.nonzero(orig_ok)[0]          # placed slots with a real vertex
+    o = inv[ok_p]                          # their original ids
+    d = deg_placed[ok_p]
+    within = np.arange(int(d.sum()), dtype=np.int64) \
+        - np.repeat(np.cumsum(d) - d, d)   # 0..deg-1 inside each segment
+    src_idx = np.repeat(g.ptr[o], d) + within
+
     if edge_mode == "equal_edges":
         new_ptr = np.concatenate([[0], np.cumsum(deg_placed)])
         e_pad = padded_len(max(E, 1), T)
         edist = DistSpec(e_pad, T)
         edge_dst = np.full(e_pad, -1, np.int64)
         edge_val = np.zeros(e_pad, np.float32)
-        for p in np.nonzero(orig_ok)[0]:
-            o = inv[p]
-            s, e = g.ptr[o], g.ptr[o + 1]
-            edge_dst[new_ptr[p]:new_ptr[p + 1]] = place[g.dst[s:e]]
-            edge_val[new_ptr[p]:new_ptr[p + 1]] = g.val[s:e]
+        dst_idx = np.repeat(new_ptr[ok_p], d) + within
+        edge_dst[dst_idx] = place[g.dst[src_idx]]
+        edge_val[dst_idx] = g.val[src_idx]
         ptr_start = new_ptr[:-1]
     elif edge_mode == "vertex_aligned":
         # Each tile owns its vertices' edges; pad every tile to the max count.
         v_chunk = v_pad // T
-        per_tile = deg_placed.reshape(T, v_chunk).sum(1)
+        degs2 = deg_placed.reshape(T, v_chunk)
+        per_tile = degs2.sum(1)
         e_chunk = int(padded_len(max(int(per_tile.max()), 1), 1))
         e_pad = e_chunk * T
         edist = DistSpec(e_pad, T)
         edge_dst = np.full(e_pad, -1, np.int64)
         edge_val = np.zeros(e_pad, np.float32)
-        ptr_start = np.zeros(v_pad, np.int64)
-        for t in range(T):
-            cursor = t * e_chunk
-            for lv in range(v_chunk):
-                p = t * v_chunk + lv
-                ptr_start[p] = cursor
-                o = inv[p]
-                if o >= 0:
-                    s, e = g.ptr[o], g.ptr[o + 1]
-                    edge_dst[cursor:cursor + (e - s)] = place[g.dst[s:e]]
-                    edge_val[cursor:cursor + (e - s)] = g.val[s:e]
-                    cursor += e - s
+        excl = np.cumsum(degs2, axis=1) - degs2  # per-tile exclusive prefix
+        ptr_start = (np.arange(T, dtype=np.int64)[:, None] * e_chunk
+                     + excl).reshape(-1)
+        dst_idx = np.repeat(ptr_start[ok_p], d) + within
+        edge_dst[dst_idx] = place[g.dst[src_idx]]
+        edge_val[dst_idx] = g.val[src_idx]
     else:
         raise ValueError(f"unknown edge_mode: {edge_mode}")
 
@@ -143,6 +156,7 @@ def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
         edge_dst=jnp.asarray(edge_dst.reshape(T, e_chunk), jnp.int32),
         edge_val=jnp.asarray(edge_val.reshape(T, e_chunk), jnp.float32),
         place=place, inv=inv, num_vertices=V, num_edges=E,
+        edge_mode=edge_mode,
     )
 
 

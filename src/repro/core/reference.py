@@ -88,6 +88,45 @@ def pagerank_ref(g: CSRGraph, damping: float = 0.85, iters: int = 20
     return rank
 
 
+def kcore_ref(g: CSRGraph, k: int) -> np.ndarray:
+    """k-core membership by sequential peeling (g symmetric, deduped).
+
+    Repeatedly delete vertices whose remaining degree is < k, decrementing
+    each neighbor once per deleted edge.  Returns (V,) int64 in {0, 1}.
+    """
+    n = g.num_vertices
+    deg = (g.ptr[1:] - g.ptr[:-1]).astype(np.int64)
+    alive = np.ones(n, bool)
+    while True:
+        newly = alive & (deg < k)
+        if not newly.any():
+            break
+        alive &= ~newly
+        for v in np.flatnonzero(newly):
+            for e in range(g.ptr[v], g.ptr[v + 1]):
+                deg[g.dst[e]] -= 1
+    return alive.astype(np.int64)
+
+
+def triangles_ref(g: CSRGraph, key: np.ndarray | None = None) -> np.ndarray:
+    """Per-vertex triangle counts, each triangle attributed to its
+    ``key``-minimum vertex (default: original id order; the engine uses
+    placed order, so pass ``pg.place``).  g must be symmetric and deduped;
+    ``counts.sum()`` is the total triangle count regardless of ``key``.
+    """
+    n = g.num_vertices
+    key = np.arange(n) if key is None else np.asarray(key)
+    adj = [set(g.dst[g.ptr[v]:g.ptr[v + 1]].tolist()) for v in range(n)]
+    cnt = np.zeros(n, np.int64)
+    for v in range(n):
+        for u in adj[v]:
+            if key[u] > key[v]:
+                for w in adj[u]:
+                    if key[w] > key[u] and w in adj[v]:
+                        cnt[v] += 1
+    return cnt
+
+
 def spmv_ref(g: CSRGraph, x: np.ndarray) -> np.ndarray:
     """Push-mode SpMV: y[dst] += val * x[src]  (i.e. y = A^T x for CSR-by-src).
 

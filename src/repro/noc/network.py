@@ -22,9 +22,11 @@ Backends:
 * :class:`Mesh2D` / :class:`Torus2D` / :class:`Ruche` — a (rows, cols)
   tile grid with dimension-ordered (X-then-Y) routing composed from two
   per-axis exchanges.  Each axis hop set is charged against **per-link**
-  capacity (``link_cap`` flits per directed link per round) with the same
-  spill-and-replay backpressure the endpoint queues use; telemetry counts
-  every link traversal and the hop distance of every injection.
+  capacity (``link_cap`` flits per directed link per routing leg — an
+  engine round has one leg per task channel of the running program) with
+  the same spill-and-replay backpressure the endpoint queues use;
+  telemetry counts every link traversal and the hop distance of every
+  injection.
 
 Link index space of the grid backends (``num_links = 8 * T``): an X block
 ``(rows, N_CHANNELS, cols)`` — the links of each row line — followed by a
@@ -106,12 +108,14 @@ class IdealAllToAll:
         """Occupancy of this tile's ingress port last round."""
         return link_flits[me]
 
-    def pressure_limit(self, cfg) -> int:
+    def pressure_limit(self, cfg, route_caps=None) -> int:
         """TSU "fabric hot" threshold: the ideal crossbar has no links, so
         pressure only means endpoint-slot saturation — ingress near the
-        combined per-destination slot bound of both routing legs."""
-        return (3 * self.T * (cfg.cap_route_range
-                              + cfg.cap_route_update)) // 4
+        combined per-destination slot bound of all the program's routing
+        legs (``route_caps``; defaults to the classic two channels)."""
+        if route_caps is None:
+            route_caps = (cfg.cap_route_range, cfg.cap_route_update)
+        return (3 * self.T * sum(route_caps)) // 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,14 +245,16 @@ class _Grid2D:
         return NetRouted(recv, recv[..., 0] >= 0, spill, spill_v, sent,
                          link, hop)
 
-    def pressure_limit(self, cfg) -> int:
+    def pressure_limit(self, cfg, route_caps=None) -> int:
         """TSU "fabric hot" threshold.  A link sees up to ``link_cap`` flits
-        per leg and pressure sums both legs, so hot = 3/4 of 2*link_cap;
-        uncapped links fall back to the endpoint-saturation bound."""
+        per leg and pressure sums every leg of the program's round (one per
+        task channel), so hot = 3/4 of n_legs*link_cap; uncapped links fall
+        back to the endpoint-saturation bound."""
+        if route_caps is None:
+            route_caps = (cfg.cap_route_range, cfg.cap_route_update)
         if self.link_cap > 0:
-            return (3 * 2 * self.link_cap) // 4
-        return (3 * self.T * (cfg.cap_route_range
-                              + cfg.cap_route_update)) // 4
+            return (3 * len(route_caps) * self.link_cap) // 4
+        return (3 * self.T * sum(route_caps)) // 4
 
     def pressure(self, me, link_flits):
         """Max occupancy over the links this tile's traffic rides: its own

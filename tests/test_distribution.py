@@ -49,6 +49,34 @@ def test_low_order_scatters_consecutive_ids(shards, base):
     assert len(set(np.asarray(owners).tolist())) == shards
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 8), st.integers(0, 6))
+def test_degree_interleave_is_bijection(n, shards, seed):
+    rng = np.random.default_rng(seed)
+    deg = rng.integers(0, 50, n)
+    place, inv = placement(n, shards, "degree_interleave", deg=deg)
+    n_pad = padded_len(n, shards)
+    assert len(set(place.tolist())) == n
+    for v in range(min(n, 50)):
+        assert inv[place[v]] == v
+    assert (inv == -1).sum() == n_pad - n
+
+
+def test_degree_interleave_spreads_hubs_round_robin():
+    """The T highest-degree vertices land on T different tiles, in rank
+    order — the paper's degree-aware placement rung."""
+    deg = np.array([5, 1, 9, 8, 0, 3, 7, 2])
+    shards = 4
+    place, _ = placement(8, shards, "degree_interleave", deg=deg)
+    chunk = padded_len(8, shards) // shards
+    hubs = np.argsort(-deg, kind="stable")[:shards]
+    assert set((place[hubs] // chunk).tolist()) == set(range(shards))
+    # top hub on tile 0's first slot, second hub on tile 1's first slot...
+    assert (place[hubs] % chunk == 0).all()
+    with pytest.raises(ValueError, match="needs deg"):
+        placement(8, shards, "degree_interleave")
+
+
 def test_hlo_shape_bytes():
     assert _shape_bytes("bf16[2,4096,8192]{2,1,0}") == 2 * 4096 * 8192 * 2
     assert _shape_bytes("f32[8]{0}") == 32

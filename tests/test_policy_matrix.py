@@ -1,0 +1,100 @@
+"""The policy x mode x noc matrix, plus telemetry shape safety.
+
+The seed suite exercised BSP and static scheduling only on the ideal
+crossbar; these tests close the matrix on the physical backends:
+
+* ``policy="static"`` and ``mode="bsp"`` on mesh/torus with finite link
+  capacity still match the sequential oracle with zero drops;
+* BSP epoch counting is exact (a depth-D chain swaps frontiers D times)
+  and identical across backends; async mode never swaps;
+* ``zero_stats``/``_acc_stats`` are shape-safe per NoC backend — the
+  ``Stats.zero()``-defaults footgun (mixing a (1,)-link zero with
+  backend-shaped telemetry, e.g. via ``pagerank(iters=0)``) now raises
+  instead of mis-broadcasting.
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.engine import EngineConfig, Stats, zero_stats
+from repro.core.graph import CSRGraph, rmat_edges
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=128, cap_updq=2048,
+                max_rounds=20000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def g():
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=1)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return alg.prepare(g, T=4)
+
+
+def root_of(g):
+    return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+
+
+@pytest.mark.parametrize("noc", ["mesh", "torus"])
+@pytest.mark.parametrize("policy,mode", [
+    ("static", "async"), ("static", "bsp"), ("traffic", "bsp")])
+def test_policy_mode_matrix_on_physical_nocs(g, pg, noc, policy, mode):
+    root = root_of(g)
+    res = alg.bfs(pg, root, small_cfg(noc=noc, link_cap=2, policy=policy,
+                                      mode=mode))
+    np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))
+    assert int(res.stats.drops) == 0
+    if mode == "bsp":
+        assert int(res.stats.epochs) >= 1
+
+
+def chain_graph(n):
+    src = np.arange(n - 1)
+    return CSRGraph.from_edges(n, src, src + 1,
+                               np.ones(n - 1, np.float32))
+
+
+@pytest.mark.parametrize("noc", ["ideal", "mesh", "torus"])
+def test_bsp_epoch_count_exact_on_chain(noc):
+    """A depth-D chain has D BSP frontier swaps, on every backend; async
+    mode never swaps (epochs stays 0)."""
+    depth = 7
+    g = chain_graph(depth + 1)
+    pg = alg.prepare(g, T=4)
+    res = alg.bfs(pg, 0, small_cfg(noc=noc, mode="bsp"))
+    np.testing.assert_array_equal(res.values, ref.bfs_ref(g, 0))
+    assert int(res.stats.epochs) == depth
+    res_a = alg.bfs(pg, 0, small_cfg(noc=noc, mode="async"))
+    assert int(res_a.stats.epochs) == 0
+
+
+def test_zero_stats_shapes_match_backend(pg):
+    for noc, links in (("ideal", 4), ("mesh", 8 * 4)):
+        z = zero_stats(small_cfg(noc=noc), pg.T)
+        assert z.flits_per_link.shape == (links,)
+
+
+def test_pagerank_zero_iters_is_backend_shaped(g, pg):
+    cfg = small_cfg(noc="mesh")
+    res0 = alg.pagerank(pg, iters=0, cfg=cfg)
+    res1 = alg.pagerank(pg, iters=1, cfg=cfg)
+    # iters=0 stats can be accumulated with a real mesh run of the same cfg
+    combined = alg._acc_stats(res0.stats, res1.stats)
+    assert int(combined.rounds) == int(res1.stats.rounds)
+    np.testing.assert_array_equal(np.asarray(combined.flits_per_link),
+                                  np.asarray(res1.stats.flits_per_link))
+
+
+def test_acc_stats_rejects_shape_mismatch(g, pg):
+    res = alg.pagerank(pg, iters=1, cfg=small_cfg(noc="mesh"))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        alg._acc_stats(Stats.zero(), res.stats)  # default (1,)-link zero
