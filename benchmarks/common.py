@@ -49,19 +49,36 @@ def timed(fn, *args, repeat: int = 1, **kw):
 
 
 def stats_row(stats) -> dict:
-    """Flatten Stats for CSV-ish rows: scalars as ints, telemetry arrays
-    (flits_per_link, hop_histogram) summarized as max/sum.  The per-channel
-    msgs/spills vectors additionally keep the legacy first/last-channel
-    scalar keys (range/update) that older figure scripts read."""
+    """Flatten Stats for CSV-ish rows: scalars as ints (floats for the
+    cycle/energy model fields), telemetry arrays (flits_per_link,
+    hop_histogram) summarized as max/sum.  The per-channel msgs/spills
+    vectors are emitted in full as ``msgs_<i>`` / ``spills_<i>`` — deep
+    programs (triangles' 4-channel chain) keep their middle channels —
+    plus the legacy first/last-channel scalar keys (``msgs_range`` /
+    ``msgs_update``) as views, which alias the same channel for
+    single-channel programs."""
     out = {}
     for k in stats._fields:
         v = np.asarray(getattr(stats, k))
         if v.ndim == 0:
-            out[k] = int(v)
+            out[k] = float(v) if np.issubdtype(v.dtype, np.floating) \
+                else int(v)
         else:
             if k in ("msgs", "spills"):
+                for i in range(v.shape[0]):
+                    out[f"{k}_{i}"] = int(v[i])
                 out[f"{k}_range"] = int(v[0])
                 out[f"{k}_update"] = int(v[-1])
             out[f"{k}_max"] = int(v.max())
             out[f"{k}_sum"] = int(v.sum())
     return out
+
+
+def perf_cols(stats, cfg: EngineConfig, T: int = None) -> dict:
+    """Modeled time / throughput / energy columns for a figure row.
+
+    Takes the run's ``cfg`` so overridden `PerfParams` (clock, leak, op
+    costs) price the derived columns exactly like the accumulator did.
+    """
+    from repro.perf import derived_metrics
+    return derived_metrics(stats, cfg.perf, T)

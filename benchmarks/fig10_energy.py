@@ -1,0 +1,57 @@
+"""Paper Fig. 10 analogue: the energy ladder across placements x fabric
+topologies x scheduling policies.
+
+The paper reports joules alongside time for every design point; with the
+cycle/energy model (repro.perf) we can do the same.  Each row runs BFS on
+one (placement, noc, policy) corner under finite link capacity — so the
+backpressure cost of a bad corner (hotspot spills, replay traffic, longer
+critical paths) shows up in *both* modeled time and modeled energy, the
+paper's two-axis comparison:
+
+* placement — low_order keeps per-destination traffic balanced;
+  high_order concentrates hubs (more spills -> more replay energy);
+* noc — mesh pays the center hotspot, torus wraps pay long-wire energy
+  per flit but shorten routes, ruche express channels cut hop counts;
+* policy — traffic-aware TSU budgets vs the static round-robin rung.
+
+``pj_per_edge`` is the ladder metric (energy normalized by useful work);
+``leak_frac`` splits static leakage from dynamic energy so slow corners
+are visibly paying idle-tile leakage, as in the paper's discussion.
+"""
+from __future__ import annotations
+
+from repro.core import algorithms as alg
+from benchmarks.common import engine_cfg, perf_cols, pick_root, rmat_graph, \
+    stats_row
+
+
+def run(scale: int = 10, T: int = 16,
+        placements=("low_order", "high_order"),
+        nocs=("ideal", "mesh", "torus", "ruche"),
+        policies=("traffic", "static")) -> list[dict]:
+    g = rmat_graph(scale)
+    root = pick_root(g)
+    rows = []
+    pgs = {p: alg.prepare(g, T, scheme=p) for p in placements}
+    for placement in placements:
+        for noc in nocs:
+            for policy in policies:
+                cfg = engine_cfg(T=T, noc=noc, policy=policy,
+                                 link_cap=0 if noc == "ideal" else 4)
+                res = alg.bfs(pgs[placement], root, cfg)
+                s = stats_row(res.stats)
+                p = perf_cols(res.stats, cfg, T)
+                rows.append({
+                    "bench": "fig10", "placement": placement, "noc": noc,
+                    "policy": policy,
+                    "rounds": s["rounds"],
+                    "cycles": p["cycles"],
+                    "time_model_s": p["time_model_s"],
+                    "gteps": p["gteps"],
+                    "energy_pj": p["energy_pj"],
+                    "pj_per_edge": p["pj_per_edge"],
+                    "leak_frac": p["leak_frac"],
+                    "spills": s["spills_sum"],
+                    "drops": s["drops"],
+                })
+    return rows

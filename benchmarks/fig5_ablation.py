@@ -19,7 +19,8 @@ tesseract-like start.
 from __future__ import annotations
 
 from repro.core import algorithms as alg
-from benchmarks.common import engine_cfg, pick_root, rmat_graph, stats_row
+from benchmarks.common import (engine_cfg, perf_cols, pick_root, rmat_graph,
+                               stats_row)
 
 RUNGS = [
     ("tesseract-like", dict(scheme="high_order", edge_mode="vertex_aligned"),
@@ -54,9 +55,10 @@ def run(scale: int = 10, T: int = 16, apps=APPS) -> list[dict]:
             elif app == "wcc":
                 res = alg.wcc(pgs, cfg)
             else:  # pagerank keeps its barrier (as in the paper's Fig. 5)
-                res = alg.pagerank(pg, iters=5, cfg=engine_cfg(
-                    policy=cfg_kw["policy"], mode="bsp"))
+                cfg = engine_cfg(policy=cfg_kw["policy"], mode="bsp")
+                res = alg.pagerank(pg, iters=5, cfg=cfg)
             s = stats_row(res.stats)
+            p = perf_cols(res.stats, cfg)
             imb = s["work_max"] * (pg.T if app != "wcc" else pgs.T) \
                 / max(s["edges_scanned"], 1)
             rows.append({
@@ -65,5 +67,7 @@ def run(scale: int = 10, T: int = 16, apps=APPS) -> list[dict]:
                 + s["msgs_update"], "spills": s["spills_range"]
                 + s["spills_update"], "edges": s["edges_scanned"],
                 "imbalance": round(imb, 3), "drops": s["drops"],
+                "cycles": p["cycles"], "time_model_s": p["time_model_s"],
+                "gteps": p["gteps"], "energy_pj": p["energy_pj"],
             })
     return rows

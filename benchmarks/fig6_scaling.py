@@ -1,33 +1,48 @@
 """Paper Fig. 6: strong scaling of BFS over grid sizes.
 
 The paper's claim: near-linear scaling until ~1k vertices/tile, where tiles
-starve for work.  Our time proxy is rounds x per-round critical path; with
-fixed per-round budgets, rounds should drop ~linearly with T until the
-starvation knee.
+starve for work.  Since the cycle model (repro.perf) landed, time is no
+longer a rounds proxy: each row reports modeled cycles (per-round critical
+path: slowest tile + busiest link), ``time_model_s``, and GTEPS — the
+strong-scaling knee must appear in *modeled time*, with fixed per-round
+budgets the rounds count alone understates large-grid overheads.
+
+``tiles`` is sorted ascending before use: ``speedup_vs_linear`` normalizes
+against the smallest grid, and an unsorted/descending argument used to
+silently produce wrong speedups (regression-tested in tests/test_perf.py).
 """
 from __future__ import annotations
 
 from repro.core import algorithms as alg
-from benchmarks.common import engine_cfg, pick_root, rmat_graph, stats_row
+from benchmarks.common import (engine_cfg, perf_cols, pick_root, rmat_graph,
+                               stats_row)
 
 
 def run(scale: int = 12, tiles=(4, 8, 16, 32, 64)) -> list[dict]:
+    tiles = tuple(sorted(tiles))
+    assert len(set(tiles)) == len(tiles), f"duplicate tile counts: {tiles}"
     g = rmat_graph(scale)
     root = pick_root(g)
     rows = []
-    base_rounds = None
+    base_time = None
     for T in tiles:
         pg = alg.prepare(g, T)
-        res = alg.bfs(pg, root, engine_cfg(T=T))
+        cfg = engine_cfg(T=T)
+        res = alg.bfs(pg, root, cfg)
         s = stats_row(res.stats)
-        if base_rounds is None:
-            base_rounds = s["rounds"] * tiles[0]
+        p = perf_cols(res.stats, cfg)
+        if base_time is None:
+            base_time = p["time_model_s"] * tiles[0]
         rows.append({
             "bench": "fig6", "T": T,
             "vertices_per_tile": g.num_vertices // T,
             "rounds": s["rounds"],
+            "cycles": p["cycles"],
+            "time_model_s": p["time_model_s"],
+            "gteps": p["gteps"],
+            "energy_pj": p["energy_pj"],
             "speedup_vs_linear": round(
-                base_rounds / (s["rounds"] * T), 3),
+                base_time / (p["time_model_s"] * T), 3),
             "edges": s["edges_scanned"],
         })
     return rows

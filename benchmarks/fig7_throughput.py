@@ -1,11 +1,14 @@
-"""Paper Fig. 7: throughput (edges/round and aggregate memory-touch proxy)
-growing with tile count — MBW scales linearly with tiles because every tile
-owns private memory; the engine analogue is edges+updates applied per round
-across the grid."""
+"""Paper Fig. 7: throughput growing with tile count — MBW scales linearly
+with tiles because every tile owns private memory.  The engine analogue
+used to be edges+updates per round; with the cycle model (repro.perf) the
+rows now report GTEPS (giga traversed edges per modeled second) and the
+aggregate memory-touch proxy per modeled time, like the paper's
+edges/s curves."""
 from __future__ import annotations
 
 from repro.core import algorithms as alg
-from benchmarks.common import engine_cfg, pick_root, rmat_graph, stats_row
+from benchmarks.common import (engine_cfg, perf_cols, pick_root, rmat_graph,
+                               stats_row)
 
 
 def run(scale: int = 12, tiles=(4, 8, 16, 32, 64), apps=("bfs", "sssp")
@@ -14,11 +17,12 @@ def run(scale: int = 12, tiles=(4, 8, 16, 32, 64), apps=("bfs", "sssp")
     root = pick_root(g)
     rows = []
     for app in apps:
-        for T in tiles:
+        for T in sorted(tiles):
             pg = alg.prepare(g, T)
-            res = (alg.bfs if app == "bfs" else alg.sssp)(
-                pg, root, engine_cfg(T=T))
+            cfg = engine_cfg(T=T)
+            res = (alg.bfs if app == "bfs" else alg.sssp)(pg, root, cfg)
             s = stats_row(res.stats)
+            p = perf_cols(res.stats, cfg)
             # bytes touched: each edge scan reads (dst, val) 8B; each update
             # applies a read-modify-write 8B — the paper's MBW proxy
             bytes_touched = s["edges_scanned"] * 8 + s["updates_applied"] * 8
@@ -26,8 +30,13 @@ def run(scale: int = 12, tiles=(4, 8, 16, 32, 64), apps=("bfs", "sssp")
                 "bench": "fig7", "app": app, "T": T,
                 "edges_per_round": round(s["edges_scanned"]
                                          / max(s["rounds"], 1), 1),
-                "bytes_per_round": round(bytes_touched
-                                         / max(s["rounds"], 1), 1),
+                "cycles": p["cycles"],
+                "time_model_s": p["time_model_s"],
+                "gteps": p["gteps"],
+                "energy_pj": p["energy_pj"],
+                "gbytes_per_s": round(bytes_touched
+                                      / max(p["time_model_s"], 1e-12)
+                                      / 1e9, 3),
                 "rounds": s["rounds"],
             })
     return rows

@@ -16,8 +16,8 @@ def main() -> None:
     fast = "--fast" in sys.argv
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
-                            fig8_noc, lm_micro, roofline, taskgraphs,
-                            work_efficiency)
+                            fig8_noc, fig10_energy, lm_micro, roofline,
+                            taskgraphs, work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -31,6 +31,13 @@ def main() -> None:
                               apps=("bfs",) if fast else ("bfs", "sssp")))
     print("# fig8: placement / NoC balance (paper Fig. 8-9)")
     _emit(fig8_noc.run(scale=8 if fast else 10, T=8 if fast else 16))
+    print("# fig10: energy ladder, placements x topologies x policies "
+          "(paper Fig. 10)")
+    _emit(fig10_energy.run(
+        scale=8 if fast else 10, T=8 if fast else 16,
+        nocs=("ideal", "mesh") if fast else ("ideal", "mesh", "torus",
+                                             "ruche"),
+        policies=("traffic",) if fast else ("traffic", "static")))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

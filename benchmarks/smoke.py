@@ -3,9 +3,18 @@ code cannot rot unnoticed.
 
 Runs the fig5 optimization ladder plus the new task-graph workloads at
 T=4 / scale=6, asserts the no-drop invariant and the reference checks on
-every row, and writes the rows as JSON (uploaded as a CI artifact).
+every row, and writes the rows — cycle/energy model columns included — as
+``BENCH_PR3.json`` (uploaded as a CI artifact: the perf trajectory's seed
+point).
 
-  PYTHONPATH=src python benchmarks/smoke.py [--out bench-smoke.json]
+If the committed baseline (``benchmarks/BENCH_PR3.baseline.json``) exists,
+every row is matched against it by its identity columns and the run FAILS
+if any row's ``rounds`` regressed (grew) vs the baseline — the engine is
+deterministic at fixed seeds, so a regression here is a real scheduling /
+backpressure change, not noise.
+
+  PYTHONPATH=src python benchmarks/smoke.py [--out BENCH_PR3.json]
+                                            [--baseline <json>|none]
 """
 from __future__ import annotations
 
@@ -17,10 +26,48 @@ import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
+
+# Columns that identify a row (everything string-valued is identity; these
+# are listed explicitly so a new string column cannot silently split keys).
+ID_COLS = ("bench", "rung", "app", "mode", "noc")
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((c, row[c]) for c in ID_COLS if c in row)
+
+
+def check_baseline(rows, baseline_path: str) -> list[str]:
+    """Compare rounds per row against the committed baseline; returns a
+    list of human-readable regressions (empty = pass).  Rows or baselines
+    missing on either side are reported too — the baseline must be
+    regenerated deliberately, not drift."""
+    with open(baseline_path) as f:
+        base = {row_key(r): r for r in json.load(f)}
+    cur = {row_key(r): r for r in rows}
+    problems = []
+    for k, r in cur.items():
+        b = base.get(k)
+        if b is None:
+            problems.append(f"row {dict(k)} missing from baseline "
+                            f"(regenerate BENCH_PR3.baseline.json)")
+        elif r.get("rounds", 0) > b.get("rounds", 0):
+            problems.append(
+                f"rounds regression {dict(k)}: "
+                f"{b.get('rounds')} -> {r.get('rounds')}")
+    for k in base:
+        if k not in cur:
+            problems.append(f"baseline row {dict(k)} no longer produced")
+    return problems
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="bench-smoke.json")
+    ap.add_argument("--out", default="BENCH_PR3.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline json to diff rounds against; 'none' "
+                         "to skip")
     ap.add_argument("--scale", type=int, default=6)
     ap.add_argument("--tiles", type=int, default=4)
     args = ap.parse_args()
@@ -33,12 +80,27 @@ def main() -> int:
 
     bad = [r for r in rows if r.get("drops", 0) != 0]
     bad += [r for r in rows if r.get("ok") is False]
+    bad += [r for r in rows  # missing perf columns must fail, not pass
+            if r.get("cycles", 0) <= 0 or r.get("energy_pj", 0) <= 0]
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
     if bad:
         print(f"FAILED rows: {bad}")
         return 1
+    if args.baseline != "none":
+        if not os.path.exists(args.baseline):
+            # a missing baseline must fail loudly, not silently skip the
+            # regression gate this job advertises ('none' opts out)
+            print(f"BASELINE MISSING: {args.baseline}")
+            return 1
+        problems = check_baseline(rows, args.baseline)
+        if problems:
+            print("BASELINE REGRESSIONS:")
+            for p in problems:
+                print(f"  {p}")
+            return 1
+        print(f"baseline check OK vs {args.baseline}")
     return 0
 
 

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import reference as ref
-from benchmarks.common import engine_cfg, rmat_graph, stats_row
+from benchmarks.common import engine_cfg, perf_cols, rmat_graph, stats_row
 
 
 def run(scale: int = 10, T: int = 16, ks=(2, 3, 4)) -> list[dict]:
@@ -30,27 +30,35 @@ def run(scale: int = 10, T: int = 16, ks=(2, 3, 4)) -> list[dict]:
     for k in ks:
         want = ref.kcore_ref(gs, k)
         for mode in ("async", "bsp"):
-            res = alg.kcore(pgs, k, engine_cfg(T=T, mode=mode))
+            cfg = engine_cfg(T=T, mode=mode)
+            res = alg.kcore(pgs, k, cfg)
             s = stats_row(res.stats)
+            p = perf_cols(res.stats, cfg)
             rows.append({
                 "bench": "taskgraph", "app": f"kcore{k}", "mode": mode,
                 "rounds": s["rounds"], "epochs": s["epochs"],
                 "members": int(res.values.sum()),
                 "msgs": s["msgs_sum"], "spills": s["spills_sum"],
                 "edges": s["edges_scanned"], "drops": s["drops"],
+                "cycles": p["cycles"], "energy_pj": p["energy_pj"],
+                "gteps": p["gteps"],
                 "ok": bool((res.values == want).all()),
             })
 
     pgt = alg.prepare_triangles(gs, T)
     want = ref.triangles_ref(gs, key=pgt.place)
     for noc in ("ideal", "mesh"):
-        res = alg.triangles(pgt, engine_cfg(T=T, noc=noc))
+        cfg = engine_cfg(T=T, noc=noc)
+        res = alg.triangles(pgt, cfg)
         s = stats_row(res.stats)
+        p = perf_cols(res.stats, cfg)
         row = {
             "bench": "taskgraph", "app": "triangles", "noc": noc,
             "rounds": s["rounds"], "triangles": int(res.values.sum()),
             "msgs": s["msgs_sum"], "spills": s["spills_sum"],
             "edges": s["edges_scanned"], "drops": s["drops"],
+            "cycles": p["cycles"], "energy_pj": p["energy_pj"],
+            "gteps": p["gteps"],
             "ok": bool((res.values == want).all()),
         }
         # per-channel traffic: the 4-channel chain's signature

@@ -52,6 +52,12 @@ Termination is the paper's hierarchical idle wire: a psum of local pending
 work (queue occupancies + frontier population); the loop exits when it hits
 zero.  The whole traversal runs inside ONE ``lax.while_loop`` — on real
 meshes there is no host round-trip per round.
+
+Each round is also *priced* by the :mod:`repro.perf` cost model
+(``EngineConfig.perf``): the slowest tile's compute plus the busiest
+link's serialization accumulate into ``Stats.cycles``, and the round's
+counters into ``Stats.energy_pj`` — so benchmarks report modeled time /
+GTEPS / joules, not just rounds (DESIGN.md "Performance model").
 """
 from __future__ import annotations
 
@@ -70,6 +76,8 @@ from repro.core.program import (BFS, PAGERANK, SPMV, SSSP,  # noqa: F401
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
 from repro.noc import make_network
+from repro.perf import (PerfParams, link_cost_vectors, round_energy_pj,
+                        tile_compute_cycles)
 
 
 # --------------------------------------------------------------------------
@@ -105,6 +113,8 @@ class EngineConfig:
     link_cap: int = 0        # flits per directed link per routing leg (a
                              # round has one leg per channel); 0 = off
     ruche_factor: int = 2    # tiles skipped by a ruche channel (noc="ruche")
+    # --- cycle/energy cost model (repro.perf) ---
+    perf: PerfParams = PerfParams()
 
     def min_caps(self, T: int) -> tuple[int, int]:
         """Worst-case per-round queue inflow for the *classic* program
@@ -150,6 +160,12 @@ class Stats(NamedTuple):
     flits_per_link: jax.Array       # (num_links,) cumulative flit traversals
     max_link_occupancy: jax.Array   # () peak per-round per-link occupancy
     hop_histogram: jax.Array        # (max_hops+1,) injections by hop count
+    # --- cycle/energy model (repro.perf; f32 — magnitudes exceed int32,
+    # and the in-loop accumulation is Kahan-compensated so small per-round
+    # increments survive far past f32's 2^24 integer ceiling) ---
+    cycles: jax.Array               # () modeled cycles, per-round critical
+                                    # path summed over rounds
+    energy_pj: jax.Array            # () modeled energy, linear in counters
 
     # Legacy scalar views: the classic program's two channels.
     @property
@@ -171,12 +187,14 @@ class Stats(NamedTuple):
     @staticmethod
     def zero(num_links: int = 1, max_hops: int = 1, num_channels: int = 2):
         z = jnp.zeros((), jnp.int32)
+        zf = jnp.zeros((), jnp.float32)
         return Stats(z, z,
                      jnp.zeros((num_channels,), jnp.int32),
                      jnp.zeros((num_channels,), jnp.int32),
                      z, z, z, z,
                      jnp.zeros((num_links,), jnp.int32), z,
-                     jnp.zeros((max_hops + 1,), jnp.int32))
+                     jnp.zeros((max_hops + 1,), jnp.int32),
+                     zf, zf)
 
 
 def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
@@ -276,7 +294,11 @@ def _set_queue(st: EngineState, i: int, q: Queue) -> EngineState:
 
 def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
                v_chunk: int, shard: GraphShard):
-    """Build the per-round function (state, stats) -> (state, stats, pending).
+    """Build the per-round function
+    ``(state, stats, kahan_comp) -> (state, stats, kahan_comp, pending)``
+    where ``kahan_comp`` is the ``(cycles, energy)`` f32 compensation pair
+    of the perf model's in-loop summation (threaded through the
+    ``while_loop`` carry, never surfaced).
 
     One generic ``queue -> budget -> transform -> net.route -> handler ->
     spill`` leg per program channel, with the destination decoded from the
@@ -291,6 +313,8 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     qcaps = tuple(ch.qcap(cfg) for ch in chans)
     owners = tuple(ch.owner_fn(ctx) for ch in chans)
     plimit = net.pressure_limit(cfg, caps)
+    pp = cfg.perf
+    t_hop, e_hop = link_cost_vectors(pp, net)
 
     def ingest(i, st, rows, valid, pop_i):
         """Feed fresh rows into channel i and produce its network messages.
@@ -299,6 +323,10 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         budget, and bound each popped task via the channel transform
         (re-pushing remainders).  Spill-only channels replay their backlog
         ahead of the fresh messages.
+
+        Also returns this tile's queue-op counts for the cycle model:
+        ``npop`` entries dequeued and ``npush`` entries enqueued (fresh
+        tasks + re-pushed split remainders) this round.
         """
         q = st.queues[i]
         if chans[i].queued:
@@ -307,18 +335,24 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             msgs, mvalid, rem, remv = chans[i].transform(ctx, taken, tvalid)
             q, d1 = queue_push(q, rem, remv)
             drops = d0 + d1
+            npop = tvalid.sum(dtype=jnp.int32)
+            npush = (valid.sum(dtype=jnp.int32)
+                     + remv.sum(dtype=jnp.int32))
         else:
             replay, rvalid, q = queue_take_front(q, pop_i, pops[i])
             msgs = jnp.concatenate([replay, rows], axis=0)
             mvalid = jnp.concatenate([rvalid, valid], axis=0)
             drops = jnp.zeros((), jnp.int32)
-        return _set_queue(st, i, q), msgs, mvalid, drops
+            npop = rvalid.sum(dtype=jnp.int32)
+            npush = jnp.zeros((), jnp.int32)
+        return _set_queue(st, i, q), msgs, mvalid, drops, npop, npush
 
     def stage_first(me, sh, st):
         f_pop, dyn_pops = _budgets(cfg, prog, qcaps, pops, st, plimit)
         st, rows, valid = prog.source(ctx, me, sh, st, f_pop)
-        st, msgs, mvalid, drops = ingest(0, st, rows, valid, dyn_pops[0])
-        return st, msgs, mvalid, drops, dyn_pops
+        st, msgs, mvalid, drops, npop, npush = ingest(
+            0, st, rows, valid, dyn_pops[0])
+        return st, msgs, mvalid, drops, dyn_pops, npop, npush
 
     def make_mid(i):
         def stage(me, sh, st, recv, rv, sp, spv, dyn_pops):
@@ -326,18 +360,27 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             st = _set_queue(st, i - 1, q)
             st, rows, valid, work = chans[i - 1].handler(
                 ctx, me, sh, st, recv, rv)
-            st, msgs, mvalid, d1 = ingest(i, st, rows, valid, dyn_pops[i])
-            return st, msgs, mvalid, d0 + d1, work
+            st, msgs, mvalid, d1, npop, npush = ingest(
+                i, st, rows, valid, dyn_pops[i])
+            nspill = spv.sum(dtype=jnp.int32)
+            return st, msgs, mvalid, d0 + d1, work, npop, npush, nspill
         return stage
 
     def stage_last(me, sh, st, recv, rv, sp, spv):
         q, d0 = queue_push(st.queues[K - 1], sp, spv)
         st = _set_queue(st, K - 1, q)
         st, _, _, work = chans[K - 1].handler(ctx, me, sh, st, recv, rv)
-        return st, d0, work
+        return st, d0, work, spv.sum(dtype=jnp.int32)
 
-    def rnd(st: EngineState, stats: Stats):
-        st, msgs, mvalid, drops, dyn_pops = comm.run(stage_first, shard, st)
+    def kahan_add(total, comp, inc):
+        """Compensated f32 accumulation: (new_total, new_comp)."""
+        y = inc - comp
+        t = total + y
+        return t, (t - total) - y
+
+    def rnd(st: EngineState, stats: Stats, kcomp):
+        st, msgs, mvalid, drops, dyn_pops, n_pop, n_push = comm.run(
+            stage_first, shard, st)
         routed = net.route(comm, msgs, mvalid, caps[0], owners[0])
         link_round = routed.link_flits
         hop_round = routed.hop_hist
@@ -345,11 +388,15 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         spillv = [routed.spill_valid]
         edges = jnp.zeros_like(drops)
         applied = jnp.zeros_like(drops)
+        n_replay = jnp.zeros_like(drops)
         for i in range(1, K):
-            st, msgs, mvalid, d, work = comm.run(
+            st, msgs, mvalid, d, work, npop, npush, nspill = comm.run(
                 make_mid(i), shard, st, routed.recv, routed.recv_valid,
                 routed.spill, routed.spill_valid, dyn_pops)
             drops = drops + d
+            n_pop = n_pop + npop
+            n_push = n_push + npush
+            n_replay = n_replay + nspill
             if chans[i - 1].work == "edges":
                 edges = edges + work
             elif chans[i - 1].work == "updates":
@@ -359,10 +406,11 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             hop_round = hop_round + routed.hop_hist
             sents.append(routed.sent)
             spillv.append(routed.spill_valid)
-        st, d, work = comm.run(stage_last, shard, st, routed.recv,
-                               routed.recv_valid, routed.spill,
-                               routed.spill_valid)
+        st, d, work, nspill = comm.run(stage_last, shard, st, routed.recv,
+                                       routed.recv_valid, routed.spill,
+                                       routed.spill_valid)
         drops = drops + d
+        n_replay = n_replay + nspill
         if chans[K - 1].work == "edges":
             edges = edges + work
         elif chans[K - 1].work == "updates":
@@ -392,22 +440,40 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
                 lambda me, v: v.sum(dtype=jnp.int32), sv)))
             for sv in spillv])
         link_g = glob(link_round)
+        edges_g = glob(comm.psum(edges))
+        applied_g = glob(comm.psum(applied))
+
+        # Cycle/energy model (repro.perf): the round costs its slowest
+        # tile's compute plus the busiest link's serialization, each link
+        # priced by its class (local / ruche express / torus wrap).
+        comp = tile_compute_cycles(pp, n_pop, n_push, n_replay, edges,
+                                   applied)
+        cyc_round = (jnp.float32(pp.t_round) + glob(comm.pmax(comp))
+                     + (link_g.astype(jnp.float32) * t_hop).max())
+        energy_round = round_energy_pj(
+            pp, comm.size, edges_g, applied_g, msgs_vec.sum(),
+            spills_vec.sum(), link_g, e_hop, cyc_round)
+        cycles_acc, c_cyc = kahan_add(stats.cycles, kcomp[0], cyc_round)
+        energy_acc, c_en = kahan_add(stats.energy_pj, kcomp[1],
+                                     energy_round)
+
         stats = Stats(
             rounds=stats.rounds + 1,
             epochs=stats.epochs + glob(epochs_inc),
             msgs=stats.msgs + msgs_vec,
             spills=stats.spills + spills_vec,
-            edges_scanned=stats.edges_scanned + glob(comm.psum(edges)),
-            updates_applied=stats.updates_applied
-            + glob(comm.psum(applied)),
+            edges_scanned=stats.edges_scanned + edges_g,
+            updates_applied=stats.updates_applied + applied_g,
             drops=stats.drops + glob(comm.psum(drops)),
             work_max=stats.work_max + glob(comm.pmax(edges)),
             flits_per_link=stats.flits_per_link + link_g,
             max_link_occupancy=jnp.maximum(stats.max_link_occupancy,
                                            link_g.max()),
             hop_histogram=stats.hop_histogram + glob(hop_round),
+            cycles=cycles_acc,
+            energy_pj=energy_acc,
         )
-        return st, stats, glob(pending)
+        return st, stats, (c_cyc, c_en), glob(pending)
 
     return rnd
 
@@ -459,17 +525,18 @@ def run_engine(comm, cfg: EngineConfig, alg, shard: GraphShard,
     rnd = make_round(comm, net, cfg, prog, e_chunk, v_chunk, shard)
 
     def cond(carry):
-        _, _, pending, r = carry
+        _, _, _, pending, r = carry
         return (pending > 0) & (r < cfg.max_rounds)
 
     def body(carry):
-        st, stats, _, r = carry
-        st, stats, pending = rnd(st, stats)
-        return st, stats, pending, r + 1
+        st, stats, kcomp, _, r = carry
+        st, stats, kcomp, pending = rnd(st, stats, kcomp)
+        return st, stats, kcomp, pending, r + 1
 
     pending0 = comm.to_global(comm.psum(comm.run(_pending, st)))
-    st, stats, _, _ = jax.lax.while_loop(
+    zf = jnp.zeros((), jnp.float32)
+    st, stats, _, _, _ = jax.lax.while_loop(
         cond, body,
         (st, Stats.zero(net.num_links, net.max_hops, len(prog.channels)),
-         pending0, jnp.int32(0)))
+         (zf, zf), pending0, jnp.int32(0)))
     return st, stats

@@ -41,10 +41,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.queues import histogram
 from repro.core.routing import bin_by_owner, route_tasks
-from repro.noc.topology import N_CHANNELS, admit, grid_shape, line_usage
+from repro.noc.topology import (CLASS_PORT, N_CHANNELS, admit, grid_shape,
+                                line_link_classes, line_usage)
 
 
 class NetRouted(NamedTuple):
@@ -89,6 +91,12 @@ class IdealAllToAll:
     @property
     def max_hops(self) -> int:
         return 1
+
+    @property
+    def link_classes(self) -> np.ndarray:
+        """Crossbar ingress ports: switch energy per flit, no wire
+        latency (endpoint serialization lives in the compute term)."""
+        return np.full(self.num_links, CLASS_PORT, np.int32)
 
     def route(self, comm, msgs, valid, capacity: int, dest_fn) -> NetRouted:
         T = self.T
@@ -146,6 +154,17 @@ class _Grid2D:
         if self.wrap:
             return max(self.cols // 2 + self.rows // 2, 1)
         return max(self.cols - 1 + self.rows - 1, 1)
+
+    @property
+    def link_classes(self) -> np.ndarray:
+        """Per-link cost class in the link index space (X block then Y
+        block) — ruche express channels and torus wraparounds are priced
+        differently from local neighbor hops by the perf model."""
+        x = np.broadcast_to(line_link_classes(self.cols, self.wrap),
+                            (self.rows, N_CHANNELS, self.cols))
+        y = np.broadcast_to(line_link_classes(self.rows, self.wrap),
+                            (self.cols, N_CHANNELS, self.rows))
+        return np.concatenate([x.reshape(-1), y.reshape(-1)])
 
     def route(self, comm, msgs, valid, capacity: int, dest_fn) -> NetRouted:
         T, rows, cols = self.T, self.rows, self.cols

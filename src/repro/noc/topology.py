@@ -35,9 +35,16 @@ from __future__ import annotations
 import math
 
 import jax.numpy as jnp
+import numpy as np
 
 N_CHANNELS = 4
 LOCAL_FWD, LOCAL_BWD, RUCHE_FWD, RUCHE_BWD = range(N_CHANNELS)
+
+# Cost classes of directed links — a topology property (what kind of wire
+# a flit rides), priced by the repro.perf model.  PORT is the ideal
+# crossbar's ingress ports: no wire latency, switch energy only.
+CLASS_LOCAL, CLASS_RUCHE, CLASS_WRAP, CLASS_PORT = 0, 1, 2, 3
+N_LINK_CLASSES = 4
 
 
 def grid_shape(T: int, rows: int = 0) -> tuple[int, int]:
@@ -91,6 +98,27 @@ def line_usage(a, b, n: int, wrap: bool = False, ruche: int = 0):
         use_b = (~fwd)[:, None] & (ln <= a_) & (ln > b_)
         use_rf = use_rb = zero
     return hops, jnp.stack([use_f, use_b, use_rf, use_rb], axis=1)
+
+
+def line_link_classes(n: int, wrap: bool = False) -> np.ndarray:
+    """Cost-class id of every directed link on one line of ``n`` tiles.
+
+    Returns (N_CHANNELS, n) int32 in the perf model's class space: the
+    RUCHE_FWD/RUCHE_BWD channels are express links (CLASS_RUCHE — they
+    drive ``ruche_factor``-long wires); on a torus line the two links that
+    close the ring — source position ``n-1`` forward and ``0`` backward,
+    exactly the links :func:`line_usage` charges for a wraparound
+    traversal — are CLASS_WRAP (the longest wire on the line); everything
+    else is a CLASS_LOCAL neighbor hop.  Static numpy: the engine bakes
+    the resulting per-link cost vectors into the compiled round.
+    """
+    cls = np.full((N_CHANNELS, n), CLASS_LOCAL, np.int32)
+    cls[RUCHE_FWD] = CLASS_RUCHE
+    cls[RUCHE_BWD] = CLASS_RUCHE
+    if wrap:
+        cls[LOCAL_FWD, n - 1] = CLASS_WRAP
+        cls[LOCAL_BWD, 0] = CLASS_WRAP
+    return cls
 
 
 def admit(use, valid, cap: int, base=None):

@@ -1,0 +1,17 @@
+"""Parameterized cycle/energy performance model (first-order, 22nm-era).
+
+Turns the engine's round/telemetry counters into modeled time, GTEPS and
+joules — see :mod:`repro.perf.model` for the cost formula and caveats.
+"""
+from repro.perf.model import (CLASS_LOCAL, CLASS_PORT, CLASS_RUCHE,
+                              CLASS_WRAP, N_LINK_CLASSES, PerfParams,
+                              derived_metrics, energy_from_totals,
+                              leak_pj, link_cost_vectors, round_energy_pj,
+                              tile_compute_cycles)
+
+__all__ = [
+    "PerfParams", "derived_metrics", "energy_from_totals", "leak_pj",
+    "link_cost_vectors", "round_energy_pj", "tile_compute_cycles",
+    "CLASS_LOCAL", "CLASS_RUCHE", "CLASS_WRAP", "CLASS_PORT",
+    "N_LINK_CLASSES",
+]

@@ -1,0 +1,220 @@
+"""First-order cycle and energy cost model for the Dalorex engine.
+
+The engine counts *rounds* — vectorized windows of machine cycles — and
+per-round telemetry (per-tile work, per-link flits).  This module prices
+that telemetry into cycles and picojoules so the benchmarks can report
+time, GTEPS and energy like the paper's Fig. 6/7/10, instead of raw round
+counts.
+
+Model (accumulated once per engine round, see ``engine.make_round``):
+
+  cycles_round = t_round
+               + max over tiles of (pops * t_pop + pushes * t_push
+                                    + spill_replays * t_spill
+                                    + edges * t_scan + updates * t_fold)
+               + max over links of (flits * t_hop(link_class))
+
+The first max is the compute critical path — the slowest tile gates the
+round, exactly like ``Stats.work_max`` gates work balance.  The second is
+the NoC serialization term: a link that carried F flits this round needed
+at least ``F * t_hop`` cycles of wire time, and links of different classes
+are priced differently (``noc.topology`` attributes every directed link to
+a class: LOCAL neighbor hop, RUCHE express channel, torus WRAP-around).
+
+  energy_round = edges * e_scan + updates * e_fold
+               + msgs * (e_push + e_pop) + spills * e_spill
+               + sum over links of (flits * e_hop(link_class))
+               + T * cycles_round * e_leak_tile_cycle
+
+Energy is linear in the global Stats counters, so the accumulated total
+reconciles exactly (up to f32 rounding) with :func:`energy_from_totals`
+applied to the final Stats — the property the tests pin down.
+
+Caveats vs RTL: this is a first-order model — no pipelining overlap
+between compute and NoC inside a round, conservative per-round critical
+path (max-of-sums, not a scheduled pipeline), and constants are 22nm-era
+estimates, not the paper's RTL synthesis numbers.  Trends (scaling knees,
+topology/placement/policy ladders) are meaningful; absolute numbers carry
+the usual factor-of-a-few analytical-model error.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# Link classes are attributed by the NoC layer (Network.link_classes /
+# noc.topology) and priced here.  PORT is the ideal crossbar's ingress
+# ports: endpoint serialization is already the per-tile compute term
+# (handlers process one message per event), so a perfect fabric adds no
+# wire latency — but each crossbar traversal still costs switch energy.
+from repro.noc.topology import (CLASS_LOCAL, CLASS_PORT,  # noqa: F401
+                                CLASS_RUCHE, CLASS_WRAP, N_LINK_CLASSES)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfParams:
+    """Per-op cycle/energy constants (22nm-era, ~1 GHz tile defaults).
+
+    Cycle costs are in tile cycles; energies in pJ.  The defaults are
+    first-order estimates in the spirit of the paper's 22nm evaluation
+    (small in-order core + SRAM tile + one-way NoC): a 64-bit local SRAM
+    access costs a couple of cycles and ~5 pJ; a router hop moves one flit
+    per cycle at ~2 pJ; express (ruche) and torus wraparound links drive
+    physically longer wires, so they pay more energy per flit (and the
+    wrap a latency penalty).  Every field is overridable — the model is
+    parameterized, not baked in.
+    """
+
+    f_ghz: float = 1.0        # tile clock, GHz (time_s = cycles / f_ghz e9)
+    # --- cycle costs ---
+    t_alu: int = 1            # one core ALU op
+    t_sram: int = 2           # one local SRAM access (64-bit word)
+    t_pop: int = 1            # queue pop (TSU dequeue + head-flit decode)
+    t_push: int = 1           # queue push
+    t_spill: int = 2          # spill replay re-enqueue
+    t_hop_local: int = 1      # router traversal, neighbor link
+    t_hop_ruche: int = 1      # express channel hop (router bypass)
+    t_hop_wrap: int = 2       # torus wraparound (longest wire on the line)
+    t_hop_port: int = 0       # ideal-crossbar port: no wire serialization
+    t_round: int = 1          # fixed per-round pipeline overhead
+    # --- energy costs (pJ) ---
+    e_alu: float = 0.5
+    e_sram: float = 5.0
+    e_pop: float = 1.0
+    e_push: float = 1.0
+    e_spill: float = 2.0
+    e_hop_local: float = 2.0
+    e_hop_ruche: float = 4.0  # ruche_factor-long wire per hop
+    e_hop_wrap: float = 5.0   # cross-die return wire
+    e_hop_port: float = 2.0   # ideal-crossbar switch traversal
+    e_leak_tile_cycle: float = 0.05  # static leakage, per tile per cycle
+
+    # Derived per-event costs of the two handler kinds ("edges"-tagged
+    # scans read one (dst, val) word and emit; "updates"-tagged folds do a
+    # read-modify-write plus the fold ALU op).
+    @property
+    def t_scan(self) -> int:
+        return self.t_sram + self.t_alu
+
+    @property
+    def t_fold(self) -> int:
+        return 2 * self.t_sram + self.t_alu
+
+    @property
+    def e_scan(self) -> float:
+        return self.e_sram + self.e_alu
+
+    @property
+    def e_fold(self) -> float:
+        return 2 * self.e_sram + self.e_alu
+
+    def hop_cycle_table(self) -> np.ndarray:
+        t = np.zeros(N_LINK_CLASSES, np.float32)
+        t[CLASS_LOCAL] = self.t_hop_local
+        t[CLASS_RUCHE] = self.t_hop_ruche
+        t[CLASS_WRAP] = self.t_hop_wrap
+        t[CLASS_PORT] = self.t_hop_port
+        return t
+
+    def hop_energy_table(self) -> np.ndarray:
+        e = np.zeros(N_LINK_CLASSES, np.float32)
+        e[CLASS_LOCAL] = self.e_hop_local
+        e[CLASS_RUCHE] = self.e_hop_ruche
+        e[CLASS_WRAP] = self.e_hop_wrap
+        e[CLASS_PORT] = self.e_hop_port
+        return e
+
+
+def link_cost_vectors(params: PerfParams, net):
+    """Static per-link cost vectors for a Network backend.
+
+    Returns ``(t_hop, e_hop)`` — two (num_links,) f32 arrays pricing each
+    directed link by its class (``net.link_classes``): local neighbor
+    links, ruche express channels, and torus wraparounds each at their own
+    per-flit cycle/energy cost.
+    """
+    cls = np.asarray(net.link_classes)
+    return (jnp.asarray(params.hop_cycle_table()[cls]),
+            jnp.asarray(params.hop_energy_table()[cls]))
+
+
+def tile_compute_cycles(params: PerfParams, pops, pushes, spill_replays,
+                        edges, updates):
+    """Per-tile compute cycles of one round (jnp, per-device shaped)."""
+    f = jnp.float32
+    return (pops.astype(f) * params.t_pop
+            + pushes.astype(f) * params.t_push
+            + spill_replays.astype(f) * params.t_spill
+            + edges.astype(f) * params.t_scan
+            + updates.astype(f) * params.t_fold)
+
+
+def leak_pj(params: PerfParams, T: int, cycles):
+    """Static leakage over ``cycles`` on a T-tile grid — the single
+    definition shared by the per-round accumulator, the reconciliation
+    oracle, and fig10's ``leak_frac`` split."""
+    return jnp.float32(T * params.e_leak_tile_cycle) * cycles
+
+
+def round_energy_pj(params: PerfParams, T: int, edges_g, updates_g,
+                    msgs_total, spills_total, link_flits_g, e_hop,
+                    cycles_round):
+    """Global energy of one round, linear in the round's Stats increments
+    (so totals reconcile with :func:`energy_from_totals`)."""
+    f = jnp.float32
+    return (edges_g.astype(f) * params.e_scan
+            + updates_g.astype(f) * params.e_fold
+            + msgs_total.astype(f) * (params.e_push + params.e_pop)
+            + spills_total.astype(f) * params.e_spill
+            + (link_flits_g.astype(f) * e_hop).sum()
+            + leak_pj(params, T, cycles_round))
+
+
+def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
+    """Recompute total energy from the final Stats counters (oracle for
+    the accumulated ``Stats.energy_pj``; the tests assert they agree)."""
+    _, e_hop = link_cost_vectors(params, net)
+    edges = float(np.asarray(stats.edges_scanned))
+    updates = float(np.asarray(stats.updates_applied))
+    msgs = float(np.asarray(stats.msgs).sum())
+    spills = float(np.asarray(stats.spills).sum())
+    flits = np.asarray(stats.flits_per_link, np.float64)
+    cycles = float(np.asarray(stats.cycles))
+    return (edges * params.e_scan + updates * params.e_fold
+            + msgs * (params.e_push + params.e_pop)
+            + spills * params.e_spill
+            + float((flits * np.asarray(e_hop, np.float64)).sum())
+            + float(np.asarray(leak_pj(params, T, np.float32(cycles)))))
+
+
+def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
+    """Time / throughput / energy columns from an accumulated Stats.
+
+    ``params`` must be the run's ``cfg.perf`` whenever it was overridden —
+    the clock and leak constants live here, not in Stats.  ``time_model_s``
+    is modeled cycles over the tile clock; ``gteps`` is giga
+    traversed-edges per modeled second (edges_scanned based, the paper's
+    TEPS convention); ``pj_per_edge`` is the energy ladder metric.  With
+    ``T`` given, the leakage share of the total (``leak_pj`` /
+    ``leak_frac``) is split out using the same :func:`leak_pj` formula the
+    accumulator priced it with.
+    """
+    params = params or PerfParams()
+    cycles = float(np.asarray(stats.cycles))
+    edges = float(np.asarray(stats.edges_scanned))
+    energy = float(np.asarray(stats.energy_pj))
+    time_s = cycles / (params.f_ghz * 1e9)
+    out = {
+        "cycles": int(round(cycles)),
+        "time_model_s": round(time_s, 9),
+        "gteps": round(edges / time_s / 1e9, 6) if time_s > 0 else 0.0,
+        "energy_pj": round(energy, 1),
+        "pj_per_edge": round(energy / edges, 3) if edges > 0 else 0.0,
+    }
+    if T is not None:
+        lk = float(np.asarray(leak_pj(params, T, np.float32(cycles))))
+        out["leak_pj"] = round(lk, 1)
+        out["leak_frac"] = round(lk / energy, 3) if energy > 0 else 0.0
+    return out

@@ -94,6 +94,7 @@ def test_decode_matches_forward_dense():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow  # step-by-step eager decode, ~8s; dense stays in tier-1
 def test_decode_matches_forward_swa():
     """Ring-buffer (sliding window) decode == windowed parallel forward."""
     cfg = get_config("mixtral-8x22b").reduced()
@@ -116,6 +117,7 @@ def test_decode_matches_forward_swa():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow  # step-by-step eager decode; dense stays in tier-1
 def test_decode_matches_forward_ssm():
     """RWKV state decode == parallel (chunked) forward."""
     cfg = get_config("rwkv6-1.6b").reduced()
@@ -136,6 +138,7 @@ def test_decode_matches_forward_ssm():
                                rtol=5e-3, atol=5e-3)
 
 
+@pytest.mark.slow  # step-by-step eager decode; dense stays in tier-1
 def test_decode_matches_forward_hybrid():
     cfg = get_config("zamba2-2.7b").reduced()
     params = tfm.init_params(jax.random.PRNGKey(10), cfg)
@@ -155,8 +158,12 @@ def test_decode_matches_forward_hybrid():
                                rtol=5e-3, atol=5e-3)
 
 
-@pytest.mark.parametrize("arch", ["granite-3-2b", "zamba2-2.7b",
-                                  "rwkv6-1.6b", "mixtral-8x22b"])
+@pytest.mark.parametrize("arch", [
+    "granite-3-2b", "rwkv6-1.6b",
+    # the two heaviest families decode eagerly for ~3s each; CI's -m slow
+    # step keeps them covered
+    pytest.param("zamba2-2.7b", marks=pytest.mark.slow),
+    pytest.param("mixtral-8x22b", marks=pytest.mark.slow)])
 def test_prefill_then_decode_matches_parallel(arch):
     """prefill(prompt) + decode steps == one parallel forward."""
     cfg = get_config(arch).reduced()

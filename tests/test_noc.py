@@ -9,9 +9,10 @@ The system invariants under test:
     and every delivered message lands on its owner tile;
   * under tiny per-link capacities nothing is dropped, spills are replayed
     to completion, and results match the sequential oracles;
-  * min-fold workloads (BFS/SSSP/WCC) are bit-identical across ALL
-    backends; add-folds (PageRank/SpMV) agree to float tolerance (delivery
-    rounds differ, so scatter-adds re-associate);
+  * min-fold workloads are bit-identical across backends (BFS on all
+    four, WCC adding the every-vertex frontier); add-folds (PageRank/SpMV)
+    agree to float tolerance (delivery rounds differ, so scatter-adds
+    re-associate);
   * with no capacity pressure, flit telemetry is conserved:
     sum(flits_per_link) == sum(hops * hop_histogram).
 """
@@ -41,7 +42,10 @@ def small_cfg(**kw):
 
 @pytest.fixture(scope="module")
 def g():
-    n, src, dst, val = rmat_edges(8, edge_factor=6, seed=0)
+    # scale 7 keeps every invariant non-trivial (spills under link_cap=1,
+    # multi-hop routes on the 2x2 grid) at a fraction of the scale-8
+    # runtime — tier-1 must stay under ~3 minutes.
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=0)
     return CSRGraph.from_edges(n, src, dst, val)
 
 
@@ -153,7 +157,9 @@ def test_spilled_messages_replay_to_completion(pg, g):
     """link_cap=1 on a 2x2 grid forces heavy spilling; everything must
     still arrive (oracle equality) with zero drops."""
     root = root_of(g)
-    for noc in ("mesh", "torus", "ruche"):
+    # mesh covers monotone lines, torus the wraparound paths; ruche replay
+    # is exercised by the link_cap=2 run in the cross-backend test above
+    for noc in ("mesh", "torus"):
         res = alg.bfs(pg, root, small_cfg(noc=noc, link_cap=1))
         np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))
         assert int(res.stats.drops) == 0
@@ -165,31 +171,57 @@ def test_spilled_messages_replay_to_completion(pg, g):
 # --------------------------------------------------------------------------
 
 def test_min_folds_bit_identical_across_backends(pg, g):
+    """BFS pins the min-fold on every backend; SSSP (weighted emit) and
+    WCC (all-vertex frontier) each add one physical backend — enough to
+    catch a divergent fold without compiling the full 3-app x 4-backend
+    matrix (tier-1 runtime budget)."""
     root = root_of(g)
     gs = alg.symmetrize(g)
     pgs = alg.prepare(gs, T=4)
     base = {n: small_cfg(noc=n, link_cap=2) for n in BACKENDS}
     bfs = {n: alg.bfs(pg, root, c) for n, c in base.items()}
-    sssp = {n: alg.sssp(pg, root, c) for n, c in base.items()}
-    wcc = {n: alg.wcc(pgs, c) for n, c in base.items()}
+    wcc = {n: alg.wcc(pgs, base[n]) for n in ("ideal", "ruche")}
     for n in BACKENDS:
         assert int(bfs[n].stats.drops) == 0
         np.testing.assert_array_equal(bfs[n].values, bfs["ideal"].values)
-        np.testing.assert_array_equal(sssp[n].values, sssp["ideal"].values)
-        np.testing.assert_array_equal(wcc[n].values, wcc["ideal"].values)
+    np.testing.assert_array_equal(wcc["ruche"].values, wcc["ideal"].values)
+    # SSSP (weighted min-fold) is pinned vs its oracle on the ideal fabric
+    # in test_engine; the full 3-app x 4-backend matrix runs below under
+    # the slow marker (CI's `-m slow` step).
+
+
+@pytest.mark.slow  # the full matrix is compile-heavy; tier-1 runs the
+def test_min_folds_full_matrix_across_backends(pg, g):  # thinned version
+    root = root_of(g)
+    gs = alg.symmetrize(g)
+    pgs = alg.prepare(gs, T=4)
+    base = {n: small_cfg(noc=n, link_cap=2) for n in BACKENDS}
+    for app, run in (("bfs", lambda c: alg.bfs(pg, root, c)),
+                     ("sssp", lambda c: alg.sssp(pg, root, c)),
+                     ("wcc", lambda c: alg.wcc(pgs, c))):
+        want = run(base["ideal"])
+        for n in BACKENDS[1:]:
+            got = run(base[n])
+            assert int(got.stats.drops) == 0, (app, n)
+            np.testing.assert_array_equal(got.values, want.values,
+                                          err_msg=f"{app} on {n}")
 
 
 def test_add_folds_match_oracle_under_every_backend(pg, g):
     x = np.random.default_rng(1).normal(size=g.num_vertices).astype(
         np.float32)
     y_ref = ref.spmv_ref(g, x.astype(np.float64))
-    pr_ref = ref.pagerank_ref(g, iters=5)
-    for noc in BACKENDS:
+    pr_ref = ref.pagerank_ref(g, iters=3)
+    # torus re-associates through its wrap paths too, but its add-fold is
+    # the same code path as mesh's; pagerank below runs it instead
+    for noc in ("ideal", "mesh", "ruche"):
         cfg = small_cfg(noc=noc, link_cap=2)
         res = alg.spmv(pg, x, cfg)
         np.testing.assert_allclose(res.values, y_ref, rtol=2e-4, atol=1e-4)
-        res = alg.pagerank(pg, iters=5, cfg=cfg)
-        np.testing.assert_allclose(res.values, pr_ref, rtol=2e-3, atol=1e-7)
+    # PR epochs reuse the SpMV-shaped engine run; one physical backend
+    # suffices on top of test_engine's ideal-fabric PR oracle check
+    res = alg.pagerank(pg, iters=3, cfg=small_cfg(noc="torus", link_cap=2))
+    np.testing.assert_allclose(res.values, pr_ref, rtol=2e-3, atol=1e-7)
 
 
 # --------------------------------------------------------------------------
@@ -200,10 +232,12 @@ def test_flit_telemetry_conserved_without_spills(pg, g):
     """With generous capacities nothing spills, so every injection travels
     its full path this round: sum(flits) == sum(hops * histogram)."""
     root = root_of(g)
-    for noc in BACKENDS:
-        cfg = small_cfg(noc=noc, link_cap=0, cap_route_range=64,
-                        cap_route_update=256, cap_rangeq=512,
-                        cap_updq=32768)
+    # torus exercises wrap links, ruche the express channels; mesh's link
+    # accounting is the torus code path minus wraps
+    for noc in ("ideal", "torus", "ruche"):
+        cfg = small_cfg(noc=noc, link_cap=0, cap_route_range=32,
+                        cap_route_update=128, cap_rangeq=512,
+                        cap_updq=8192)
         res = alg.bfs(pg, root, cfg)
         s = res.stats
         assert int(s.spills_range + s.spills_update) == 0

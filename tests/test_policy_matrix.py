@@ -31,7 +31,9 @@ def small_cfg(**kw):
 
 @pytest.fixture(scope="module")
 def g():
-    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=1)
+    # tiny on purpose: the matrix is compile-heavy (each policy x mode x
+    # noc corner is its own jit) and tier-1 must stay under ~3 minutes.
+    n, src, dst, val = rmat_edges(6, edge_factor=5, seed=1)
     return CSRGraph.from_edges(n, src, dst, val)
 
 
@@ -44,9 +46,11 @@ def root_of(g):
     return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
 
 
-@pytest.mark.parametrize("noc", ["mesh", "torus"])
-@pytest.mark.parametrize("policy,mode", [
-    ("static", "async"), ("static", "bsp"), ("traffic", "bsp")])
+@pytest.mark.parametrize("policy,mode,noc", [
+    # one physical backend per (policy, mode) corner — alternating mesh /
+    # torus keeps both wirings in the matrix at half the compile count
+    ("static", "async", "mesh"), ("static", "bsp", "torus"),
+    ("traffic", "bsp", "mesh")])
 def test_policy_mode_matrix_on_physical_nocs(g, pg, noc, policy, mode):
     root = root_of(g)
     res = alg.bfs(pg, root, small_cfg(noc=noc, link_cap=2, policy=policy,
@@ -63,7 +67,7 @@ def chain_graph(n):
                                np.ones(n - 1, np.float32))
 
 
-@pytest.mark.parametrize("noc", ["ideal", "mesh", "torus"])
+@pytest.mark.parametrize("noc", ["ideal", "torus"])
 def test_bsp_epoch_count_exact_on_chain(noc):
     """A depth-D chain has D BSP frontier swaps, on every backend; async
     mode never swaps (epochs stays 0)."""
@@ -73,8 +77,9 @@ def test_bsp_epoch_count_exact_on_chain(noc):
     res = alg.bfs(pg, 0, small_cfg(noc=noc, mode="bsp"))
     np.testing.assert_array_equal(res.values, ref.bfs_ref(g, 0))
     assert int(res.stats.epochs) == depth
-    res_a = alg.bfs(pg, 0, small_cfg(noc=noc, mode="async"))
-    assert int(res_a.stats.epochs) == 0
+    if noc == "ideal":  # async-never-swaps is fabric-independent
+        res_a = alg.bfs(pg, 0, small_cfg(noc=noc, mode="async"))
+        assert int(res_a.stats.epochs) == 0
 
 
 def test_zero_stats_shapes_match_backend(pg):

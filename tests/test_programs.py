@@ -39,7 +39,10 @@ def small_cfg(**kw):
 
 @pytest.fixture(scope="module")
 def gs():
-    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=2)
+    # scale 6 keeps every case non-trivial (k=5 core: 22/64 members;
+    # 235 triangles) at a fraction of the scale-7 runtime — tier-1 must
+    # stay under ~3 minutes.
+    n, src, dst, val = rmat_edges(6, edge_factor=5, seed=2)
     return alg.symmetrize(CSRGraph.from_edges(n, src, dst, val))
 
 
@@ -53,7 +56,7 @@ def pgt(gs):
     return alg.prepare_triangles(gs, T=4)
 
 
-@pytest.mark.parametrize("k", [2, 3, 5])
+@pytest.mark.parametrize("k", [2, 5])
 @pytest.mark.parametrize("mode", ["async", "bsp"])
 def test_kcore_matches_peel_oracle(gs, pgs, k, mode):
     want = ref.kcore_ref(gs, k)
@@ -64,11 +67,12 @@ def test_kcore_matches_peel_oracle(gs, pgs, k, mode):
 
 
 def test_kcore_on_physical_noc(gs, pgs):
+    # one physical backend: the peel program's spill-replay interaction is
+    # wiring-independent (BFS pins mesh vs torus in test_noc)
     want = ref.kcore_ref(gs, 3)
-    for noc in ("mesh", "torus"):
-        res = alg.kcore(pgs, 3, small_cfg(noc=noc, link_cap=2))
-        np.testing.assert_array_equal(res.values, want)
-        assert int(res.stats.drops) == 0
+    res = alg.kcore(pgs, 3, small_cfg(noc="mesh", link_cap=2))
+    np.testing.assert_array_equal(res.values, want)
+    assert int(res.stats.drops) == 0
 
 
 def test_triangles_match_oracle(gs, pgt):

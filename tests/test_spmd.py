@@ -40,6 +40,11 @@ SCRIPT = textwrap.dedent("""
     # identical round/message counts: the two backends are the same machine
     assert int(r_spmd.stats.rounds) == int(r_local.stats.rounds)
     assert int(r_spmd.stats.msgs_update) == int(r_local.stats.msgs_update)
+    # the cycle/energy model accumulates bit-for-bit too (f32 scalars fed
+    # by identical psum/pmax reductions)
+    assert float(r_spmd.stats.cycles) == float(r_local.stats.cycles)
+    assert float(r_spmd.stats.energy_pj) == float(r_local.stats.energy_pj)
+    assert float(r_spmd.stats.cycles) > 0
 
     # SSSP
     s_spmd = alg.sssp(pg, root, cfg, mesh=mesh)
@@ -65,6 +70,9 @@ SCRIPT = textwrap.dedent("""
             np.asarray(n_spmd.stats.flits_per_link),
             np.asarray(n_local.stats.flits_per_link))
         assert int(n_spmd.stats.drops) == 0
+        assert float(n_spmd.stats.cycles) == float(n_local.stats.cycles)
+        assert float(n_spmd.stats.energy_pj) == \
+            float(n_local.stats.energy_pj)
     print("SPMD-OK")
 """)
 
