@@ -16,8 +16,8 @@ def main() -> None:
     fast = "--fast" in sys.argv
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
-                            fig8_noc, fig10_energy, lm_micro, roofline,
-                            taskgraphs, work_efficiency)
+                            fig8_noc, fig10_energy, fig11_backend, lm_micro,
+                            roofline, taskgraphs, work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -38,6 +38,12 @@ def main() -> None:
         nocs=("ideal", "mesh") if fast else ("ideal", "mesh", "torus",
                                              "ruche"),
         policies=("traffic",) if fast else ("traffic", "static")))
+    print("# fig11: engine execution backend, xla vs pallas tile-grid "
+          "kernels (interpret)")
+    _emit(fig11_backend.run(
+        scale=8 if fast else 10, T=8 if fast else 16,
+        apps=("bfs", "spmv") if fast else fig11_backend.APPS,
+        repeat=1 if fast else 2))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

@@ -1,11 +1,13 @@
 """Benchmark smoke runner for CI: tiny-scale figure drivers so benchmark
 code cannot rot unnoticed.
 
-Runs the fig5 optimization ladder plus the new task-graph workloads at
-T=4 / scale=6, asserts the no-drop invariant and the reference checks on
-every row, and writes the rows — cycle/energy model columns included — as
-``BENCH_PR3.json`` (uploaded as a CI artifact: the perf trajectory's seed
-point).
+Runs the fig5 optimization ladder, the task-graph workloads, and the
+fig11 backend bench (xla vs pallas tile-grid kernels — the CI proof that
+``backend="pallas"`` rows exist and match) at T=4 / scale=6, asserts the
+no-drop invariant and the reference checks on every row, and writes the
+rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
+fig11 rows are additionally written standalone as ``BENCH_FIG11.json``
+(both uploaded as CI artifacts).
 
 If the committed baseline (``benchmarks/BENCH_PR3.baseline.json``) exists,
 every row is matched against it by its identity columns and the run FAILS
@@ -31,7 +33,7 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
-ID_COLS = ("bench", "rung", "app", "mode", "noc")
+ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend")
 
 
 def row_key(row: dict) -> tuple:
@@ -65,6 +67,9 @@ def check_baseline(rows, baseline_path: str) -> list[str]:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_PR3.json")
+    ap.add_argument("--fig11-out", default="BENCH_FIG11.json",
+                    help="standalone copy of the fig11 backend rows; "
+                         "'none' to skip")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline json to diff rounds against; 'none' "
                          "to skip")
@@ -73,17 +78,30 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.time()
-    from benchmarks import fig5_ablation, taskgraphs
+    from benchmarks import fig5_ablation, fig11_backend, taskgraphs
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
+    # timing=False + repeat=0: one engine run per row — the wall-clock is
+    # discarded anyway, and the baseline-checked artifact stays
+    # machine-independent
+    fig11 = fig11_backend.run(scale=args.scale, T=args.tiles,
+                              apps=("bfs", "spmv", "triangles"),
+                              timing=False, repeat=0)
+    rows += fig11
 
-    bad = [r for r in rows if r.get("drops", 0) != 0]
+    bad = []
+    if not any(r.get("backend") == "pallas" for r in rows):
+        bad.append("smoke must emit at least one backend=pallas row")
+    bad += [r for r in rows if r.get("drops", 0) != 0]
     bad += [r for r in rows if r.get("ok") is False]
     bad += [r for r in rows  # missing perf columns must fail, not pass
             if r.get("cycles", 0) <= 0 or r.get("energy_pj", 0) <= 0]
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
+    if args.fig11_out != "none":
+        with open(args.fig11_out, "w") as f:
+            json.dump(fig11, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
     if bad:
         print(f"FAILED rows: {bad}")

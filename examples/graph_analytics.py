@@ -7,36 +7,55 @@ task-graph workloads (k-core peeling, 2-hop triangle counting) that the
 generic task-program executor opens beyond the fixed T1/T2/T3 pipeline.
 
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
+      [--preset rmat-small-pallas] [--backend pallas]
+
+``--preset`` pulls scale/tiles/edge-factor/backend from
+``repro.configs.dalorex_graph.PRESETS``; explicit flags override it.
+``--backend pallas`` runs every engine call on the tile-grid kernels
+(bit-identical results; interpret mode on CPU).
 """
 import argparse
+import functools
 
 import numpy as np
 
+from repro.configs.dalorex_graph import PRESETS
 from repro.core import algorithms as alg
 from repro.core import reference as ref
-from repro.core.engine import EngineConfig
+from repro.core.engine import EngineConfig as _EngineConfig
 from repro.core.graph import CSRGraph, rmat_edges
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=int, default=11)
-    ap.add_argument("--tiles", type=int, default=16)
+    ap.add_argument("--preset", choices=sorted(PRESETS), default=None)
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--tiles", type=int, default=None)
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None)
     args = ap.parse_args()
+    wl = PRESETS[args.preset] if args.preset else None
+    scale = args.scale if args.scale is not None else \
+        (wl.scale if wl else 11)
+    tiles = args.tiles if args.tiles is not None else \
+        (wl.tiles if wl else 16)
+    backend = args.backend if args.backend is not None else \
+        (wl.backend if wl else "xla")
+    ef = wl.edge_factor if wl else 10
+    EngineConfig = functools.partial(_EngineConfig, backend=backend)
 
-    n, src, dst, val = rmat_edges(args.scale, edge_factor=10, seed=1)
+    n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=1)
     g = CSRGraph.from_edges(n, src, dst, val)
     gs = alg.symmetrize(g)
     root = int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
-    cfg = EngineConfig()
-    print(f"V={g.num_vertices} E={g.num_edges} tiles={args.tiles}")
+    print(f"V={g.num_vertices} E={g.num_edges} tiles={tiles} "
+          f"backend={backend}")
     print(f"{'app':10s} {'mode':6s} {'rounds':>7s} {'msgs':>9s} "
           f"{'spills':>7s} {'edges':>9s}  check")
 
     for mode in ("async", "bsp"):
         c = EngineConfig(mode=mode)
-        pg = alg.prepare(g, args.tiles)
-        pgs = alg.prepare(gs, args.tiles)
+        pg = alg.prepare(g, tiles)
+        pgs = alg.prepare(gs, tiles)
         for app in ("bfs", "sssp", "wcc", "pagerank", "spmv"):
             if app == "bfs":
                 res = alg.bfs(pg, root, c)
@@ -72,7 +91,7 @@ def main():
     # each wiring's hotspot structure; drops stay 0 by construction.
     print(f"\n{'noc':7s} {'rounds':>7s} {'spills':>7s} {'max_link_occ':>13s} "
           f"{'avg_hops':>9s}")
-    pg = alg.prepare(g, args.tiles)
+    pg = alg.prepare(g, tiles)
     expect = ref.bfs_ref(g, root)
     for noc in ("ideal", "mesh", "torus", "ruche"):
         res = alg.bfs(pg, root, EngineConfig(noc=noc))
@@ -95,7 +114,7 @@ def main():
               f"{int(np.asarray(s.msgs).sum()):9d} "
               f"{int(res.values.sum()):10d}  {'OK' if ok else 'FAIL'}")
         assert ok and int(s.drops) == 0
-    pgt = alg.prepare_triangles(gs, args.tiles)
+    pgt = alg.prepare_triangles(gs, tiles)
     res = alg.triangles(pgt, EngineConfig())
     ok = (res.values == ref.triangles_ref(gs, key=pgt.place)).all()
     s = res.stats

@@ -16,6 +16,10 @@ class GraphWorkload:
     edge_factor: int = 10
     tiles: int = 16       # emulated Dalorex grid size
     apps: tuple = ("bfs", "sssp", "pagerank", "wcc", "spmv")
+    # engine execution backend ("xla" | "pallas"): the Pallas tile-grid
+    # kernels are bit-identical, so presets differ only in what the run
+    # exercises (interpret-mode kernel coverage vs plain XLA tracing)
+    backend: str = "xla"
 
 
 PRESETS = {
@@ -26,6 +30,9 @@ PRESETS = {
     # amazon-like: V=262k, E~1.2M -> scale 18 ef 5 approximates the shape
     "amazon-like": GraphWorkload("amazon-like", scale=18, edge_factor=5,
                                  tiles=64),
+    # the tile-grid kernel path end to end (kernels/engine, interpret mode)
+    "rmat-small-pallas": GraphWorkload("rmat-small-pallas", scale=10,
+                                       backend="pallas"),
 }
 
 

@@ -58,6 +58,12 @@ Each round is also *priced* by the :mod:`repro.perf` cost model
 link's serialization accumulate into ``Stats.cycles``, and the round's
 counters into ``Stats.energy_pj`` — so benchmarks report modeled time /
 GTEPS / joules, not just rounds (DESIGN.md "Performance model").
+
+The per-tile legs themselves execute on ``EngineConfig.backend``: "xla"
+traces them inline, "pallas" dispatches to the tile-grid kernels of
+:mod:`repro.kernels.engine` (one grid program = one tile, shard resident
+in VMEM) — bit-identical by contract, per-channel overridable via
+``TaskSpec.backend`` (DESIGN.md "Pallas backend").
 """
 from __future__ import annotations
 
@@ -75,6 +81,7 @@ from repro.core.program import (BFS, PAGERANK, SPMV, SSSP,  # noqa: F401
                                 as_program)
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
+from repro.kernels.engine import queue_push_pop
 from repro.noc import make_network
 from repro.perf import (PerfParams, link_cost_vectors, round_energy_pj,
                         tile_compute_cycles)
@@ -107,6 +114,16 @@ class EngineConfig:
     policy: str = "traffic"  # "traffic" | "static"
     mode: str = "async"      # "async" (barrierless) | "bsp"
     max_rounds: int = 100_000
+    # --- execution backend of the per-tile round legs ---
+    # "xla" traces the queue/scan/fold legs inline; "pallas" dispatches them
+    # to the repro.kernels.engine tile-grid kernels (one grid program = one
+    # tile, shard resident in VMEM).  Results are bit-identical by contract
+    # (tests/test_backend_pallas.py).  A TaskSpec.backend hint overrides
+    # this per channel.  ``pallas_interpret=True`` (the default) runs the
+    # kernels through the Pallas interpreter so CPU CI executes the same
+    # kernel bodies; set False only on a real TPU (DESIGN.md caveats).
+    backend: str = "xla"     # "xla" | "pallas"
+    pallas_interpret: bool = True
     # --- NoC backend (repro.noc) ---
     noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche"
     noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
@@ -304,10 +321,21 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     spill`` leg per program channel, with the destination decoded from the
     head flit (the paper's headerless routing).  ``net`` is a
     :mod:`repro.noc` Network backend; every leg goes through it.
+
+    Each leg executes on the backend resolved from ``cfg.backend`` and the
+    channel's ``TaskSpec.backend`` hint: "xla" inline, or "pallas" via the
+    :mod:`repro.kernels.engine` tile-grid kernels (the fused queue turn
+    here; the scan/fold kernels inside the dispatching handlers).  The TSU,
+    the NoC, and the perf model are backend-agnostic — they only ever see
+    the legs' (bit-identical) outputs.
     """
     ctx = Ctx(cfg, comm.size, e_chunk, v_chunk)
     chans = prog.channels
     K = len(chans)
+    backends = tuple(ch.resolve_backend(cfg) for ch in chans)
+    # per-leg contexts; the frontier source is the head of channel 0's leg
+    ctxs = tuple(ctx._replace(backend=b) for b in backends)
+    src_ctx = ctxs[0]
     caps = tuple(ch.route_cap(cfg) for ch in chans)
     pops = tuple(ch.pop_budget(cfg) for ch in chans)
     qcaps = tuple(ch.qcap(cfg) for ch in chans)
@@ -327,19 +355,39 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         Also returns this tile's queue-op counts for the cycle model:
         ``npop`` entries dequeued and ``npush`` entries enqueued (fresh
         tasks + re-pushed split remainders) this round.
+
+        On the pallas backend the push+pop pair runs as ONE fused
+        :func:`repro.kernels.engine.queue_push_pop` kernel turn (spill-only
+        channels fuse with an empty fresh batch); the split-remainder
+        re-push stays a plain tail scatter on both backends.
         """
         q = st.queues[i]
         if chans[i].queued:
-            q, d0 = queue_push(q, rows, valid)
-            taken, tvalid, q = queue_take_front(q, pop_i, pops[i])
-            msgs, mvalid, rem, remv = chans[i].transform(ctx, taken, tvalid)
+            if backends[i] == "pallas":
+                taken, tvalid, qdata, qcount, d0 = queue_push_pop(
+                    q.data, q.count, rows, valid, pop_i, pops[i],
+                    interpret=cfg.pallas_interpret)
+                q = Queue(qdata, qcount)
+            else:
+                q, d0 = queue_push(q, rows, valid)
+                taken, tvalid, q = queue_take_front(q, pop_i, pops[i])
+            msgs, mvalid, rem, remv = chans[i].transform(ctxs[i], taken,
+                                                         tvalid)
             q, d1 = queue_push(q, rem, remv)
             drops = d0 + d1
             npop = tvalid.sum(dtype=jnp.int32)
             npush = (valid.sum(dtype=jnp.int32)
                      + remv.sum(dtype=jnp.int32))
         else:
-            replay, rvalid, q = queue_take_front(q, pop_i, pops[i])
+            if backends[i] == "pallas":
+                none = jnp.zeros((1,), bool)
+                pad = jnp.zeros((1, q.data.shape[1]), jnp.int32)
+                replay, rvalid, qdata, qcount, _ = queue_push_pop(
+                    q.data, q.count, pad, none, pop_i, pops[i],
+                    interpret=cfg.pallas_interpret)
+                q = Queue(qdata, qcount)
+            else:
+                replay, rvalid, q = queue_take_front(q, pop_i, pops[i])
             msgs = jnp.concatenate([replay, rows], axis=0)
             mvalid = jnp.concatenate([rvalid, valid], axis=0)
             drops = jnp.zeros((), jnp.int32)
@@ -349,7 +397,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
 
     def stage_first(me, sh, st):
         f_pop, dyn_pops = _budgets(cfg, prog, qcaps, pops, st, plimit)
-        st, rows, valid = prog.source(ctx, me, sh, st, f_pop)
+        st, rows, valid = prog.source(src_ctx, me, sh, st, f_pop)
         st, msgs, mvalid, drops, npop, npush = ingest(
             0, st, rows, valid, dyn_pops[0])
         return st, msgs, mvalid, drops, dyn_pops, npop, npush
@@ -359,7 +407,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             q, d0 = queue_push(st.queues[i - 1], sp, spv)
             st = _set_queue(st, i - 1, q)
             st, rows, valid, work = chans[i - 1].handler(
-                ctx, me, sh, st, recv, rv)
+                ctxs[i - 1], me, sh, st, recv, rv)
             st, msgs, mvalid, d1, npop, npush = ingest(
                 i, st, rows, valid, dyn_pops[i])
             nspill = spv.sum(dtype=jnp.int32)
@@ -369,7 +417,8 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     def stage_last(me, sh, st, recv, rv, sp, spv):
         q, d0 = queue_push(st.queues[K - 1], sp, spv)
         st = _set_queue(st, K - 1, q)
-        st, _, _, work = chans[K - 1].handler(ctx, me, sh, st, recv, rv)
+        st, _, _, work = chans[K - 1].handler(ctxs[K - 1], me, sh, st, recv,
+                                              rv)
         return st, d0, work, spv.sum(dtype=jnp.int32)
 
     def kahan_add(total, comp, inc):

@@ -49,17 +49,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.queues import f2i, i2f
+from repro.kernels.engine import (edge_scan_gather, fold_scatter,
+                                  frontier_pop)
 
 INF = jnp.float32(np.finfo(np.float32).max)
 
 
 class Ctx(NamedTuple):
-    """Static per-run context threaded to sources/transforms/handlers."""
+    """Static per-run context threaded to sources/transforms/handlers.
+
+    ``backend`` is the execution backend of the *current* leg, resolved by
+    ``engine.make_round`` from ``EngineConfig.backend`` and the channel's
+    :attr:`TaskSpec.backend` hint — "xla" runs the building blocks inline,
+    "pallas" dispatches them to the :mod:`repro.kernels.engine` tile-grid
+    kernels (bit-identical by contract; see DESIGN.md "Pallas backend").
+    """
 
     cfg: object   # EngineConfig (static dataclass)
     T: int
     e_chunk: int
     v_chunk: int
+    backend: str = "xla"
+
+
+def _interpret(ctx: Ctx) -> bool:
+    return getattr(ctx.cfg, "pallas_interpret", True)
 
 
 # --------------------------------------------------------------------------
@@ -130,6 +144,14 @@ class TaskSpec:
     ``emit_factor`` bounds handler fan-out per received message (the int, or
     "max_t2" for edge scans) — it feeds the worst-case inflow formula of
     ``Program.min_caps`` that sizes the successor channel's queue.
+
+    ``backend`` is the per-channel execution-backend hint: ``None`` inherits
+    ``EngineConfig.backend``; "xla" / "pallas" pin this channel's queue and
+    handler legs regardless of the config (e.g. a channel whose handler has
+    no kernel form can stay on "xla" while the rest of the program runs on
+    the tile-grid kernels).  Handlers built from the dispatching building
+    blocks below (``frontier_source`` / ``edge_scan`` / ``scatter_fold``)
+    honor the resolved backend via ``Ctx.backend``.
     """
 
     name: str
@@ -144,6 +166,14 @@ class TaskSpec:
     cap_route: Optional[int] = None
     queue_cap: Optional[int] = None
     pop: Optional[int] = None
+    backend: Optional[str] = None
+
+    def resolve_backend(self, cfg) -> str:
+        """The execution backend of this channel's legs under ``cfg``."""
+        b = self.backend if self.backend is not None else \
+            getattr(cfg, "backend", "xla")
+        assert b in ("xla", "pallas"), f"unknown backend {b!r}"
+        return b
 
     def route_cap(self, cfg) -> int:
         if self.cap_route is not None:
@@ -290,8 +320,13 @@ def frontier_source(payload: Callable) -> Callable:
     """
 
     def source(ctx: Ctx, me, sh, st, budget):
-        vidx, vvalid, frontier = take_first_k(st.frontier, budget,
-                                              ctx.cfg.f_pop)
+        if ctx.backend == "pallas":
+            vidx, vvalid, frontier = frontier_pop(
+                st.frontier, budget, ctx.cfg.f_pop,
+                interpret=_interpret(ctx))
+        else:
+            vidx, vvalid, frontier = take_first_k(st.frontier, budget,
+                                                  ctx.cfg.f_pop)
         deg = sh.deg[vidx]
         start = sh.ptr_start[vidx]
         pay = payload(ctx, me, sh, st, vidx, deg)
@@ -330,20 +365,43 @@ def edge_scan(emit_rows: Callable) -> Callable:
 
     def handler(ctx: Ctx, me, sh, st, recv, rv):
         r_start, r_stop = recv[:, 0], recv[:, 1]
-        length = jnp.where(rv, r_stop - r_start, 0)
-        local0 = jnp.where(rv, r_start % ctx.e_chunk, 0)
-        j = jnp.arange(ctx.cfg.max_t2, dtype=jnp.int32)[None, :]
-        eidx = local0[:, None] + j                      # (R, MAX_T2)
-        jvalid = rv[:, None] & (j < length[:, None])
-        eidx_c = jnp.minimum(eidx, ctx.e_chunk - 1)
-        nb = sh.edge_dst[eidx_c]
-        w = sh.edge_val[eidx_c]
-        jvalid = jvalid & (nb >= 0)
+        if ctx.backend == "pallas":
+            nb, w, jvalid = edge_scan_gather(
+                sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
+                ctx.cfg.max_t2, interpret=_interpret(ctx))
+        else:
+            length = jnp.where(rv, r_stop - r_start, 0)
+            local0 = jnp.where(rv, r_start % ctx.e_chunk, 0)
+            j = jnp.arange(ctx.cfg.max_t2, dtype=jnp.int32)[None, :]
+            eidx = local0[:, None] + j                  # (R, MAX_T2)
+            jvalid = rv[:, None] & (j < length[:, None])
+            eidx_c = jnp.minimum(eidx, ctx.e_chunk - 1)
+            nb = sh.edge_dst[eidx_c]
+            w = sh.edge_val[eidx_c]
+            jvalid = jvalid & (nb >= 0)
         rows, ov = emit_rows(ctx, recv, nb, w, jvalid)
         edges = jvalid.sum(dtype=jnp.int32)
         return st, rows.reshape(-1, rows.shape[-1]), ov.reshape(-1), edges
 
     return handler
+
+
+def scatter_fold(ctx: Ctx, target: jax.Array, lidx: jax.Array,
+                 vals: jax.Array, valid: jax.Array, op: str) -> jax.Array:
+    """T3 scatter primitive shared by every fold: min/add ``vals[valid]``
+    into ``target`` at local indices ``lidx`` (which must already map
+    invalid rows to the trash slot ``target.shape[0]``).  Dispatches to the
+    :func:`repro.kernels.engine.fold_scatter` kernel on the pallas backend;
+    both paths are bit-identical (owner-local, atomic-free writes)."""
+    if ctx.backend == "pallas":
+        return fold_scatter(target, lidx, vals, valid, op=op,
+                            interpret=_interpret(ctx))
+    neutral = INF if op == "min" else jnp.float32(0.0)
+    ext = jnp.concatenate([target, jnp.full((1,), neutral, jnp.float32)])
+    masked = jnp.where(valid, vals, neutral)
+    ext = ext.at[lidx].min(masked) if op == "min" else \
+        ext.at[lidx].add(masked)
+    return ext[:target.shape[0]]
 
 
 def min_fold(ctx: Ctx, me, sh, st, recv, rv):
@@ -353,8 +411,7 @@ def min_fold(ctx: Ctx, me, sh, st, recv, rv):
     lidx = jnp.where(rv, nb % ctx.v_chunk, ctx.v_chunk)  # pad -> trash slot
     val = i2f(vb)
     applied = rv.sum(dtype=jnp.int32)
-    ext = jnp.concatenate([st.value, jnp.full((1,), INF, jnp.float32)])
-    after = ext.at[lidx].min(jnp.where(rv, val, INF))[:ctx.v_chunk]
+    after = scatter_fold(ctx, st.value, lidx, val, rv, "min")
     improved = after < st.value
     if ctx.cfg.mode == "async":
         st = st._replace(value=after, frontier=st.frontier | improved)
@@ -371,8 +428,7 @@ def add_fold(ctx: Ctx, me, sh, st, recv, rv):
     lidx = jnp.where(rv, nb % ctx.v_chunk, ctx.v_chunk)
     val = i2f(vb)
     applied = rv.sum(dtype=jnp.int32)
-    ext = jnp.concatenate([st.acc, jnp.zeros((1,), jnp.float32)])
-    acc = ext.at[lidx].add(jnp.where(rv, val, 0.0))[:ctx.v_chunk]
+    acc = scatter_fold(ctx, st.acc, lidx, val, rv, "add")
     return st._replace(acc=acc), None, None, applied
 
 
@@ -446,8 +502,7 @@ def kcore_program(k: int) -> Program:
         lidx = jnp.where(rv, nb % ctx.v_chunk, ctx.v_chunk)
         dec = i2f(vb)
         applied = rv.sum(dtype=jnp.int32)
-        ext = jnp.concatenate([st.value, jnp.zeros((1,), jnp.float32)])
-        after = ext.at[lidx].add(-jnp.where(rv, dec, 0.0))[:ctx.v_chunk]
+        after = scatter_fold(ctx, st.value, lidx, -dec, rv, "add")
         newly = (st.acc == 0.0) & (after < jnp.float32(kf))
         acc = jnp.where(newly, jnp.float32(1.0), st.acc)
         if ctx.cfg.mode == "async":
@@ -535,8 +590,8 @@ def _make_triangles_program() -> Program:
         deg = sh.deg[lidx]
         found = _segment_contains(sh.edge_dst, lo, deg, w) & rv
         slot = jnp.where(rv, lidx, ctx.v_chunk)
-        ext = jnp.concatenate([st.acc, jnp.zeros((1,), jnp.float32)])
-        acc = ext.at[slot].add(found.astype(jnp.float32))[:ctx.v_chunk]
+        acc = scatter_fold(ctx, st.acc, slot, found.astype(jnp.float32),
+                           rv, "add")
         return (st._replace(acc=acc), None, None,
                 found.sum(dtype=jnp.int32))
 

@@ -1,0 +1,7 @@
+"""Pallas execution backend for the Dalorex engine round (one grid program
+= one tile; see kernel.py and DESIGN.md "Pallas backend")."""
+from repro.kernels.engine.kernel import (edge_scan_gather, fold_scatter,
+                                         frontier_pop, queue_push_pop)
+
+__all__ = ["edge_scan_gather", "fold_scatter", "frontier_pop",
+           "queue_push_pop"]

@@ -1,0 +1,247 @@
+"""Pallas tile-grid execution backend for the Dalorex engine round.
+
+One grid program = one Dalorex tile.  The engine's per-round hot path —
+the queue->scan->route->fold legs of ``engine.make_round`` — is re-expressed
+here as four Pallas kernels whose *block* is the tile's VMEM-resident
+vertex/edge shard.  Under ``LocalComm`` the engine vmaps per-tile stages,
+and Pallas's batching rule turns the vmapped tile axis into a leading grid
+dimension — literally one grid program per tile; under ``AxisComm``
+(shard_map SPMD) each device *is* one tile and the kernels run gridless on
+its shard.  See DESIGN.md "Pallas backend" for the tile-grid mapping, the
+per-tile VMEM budget, and the TPU (non-interpret) caveats.
+
+The four kernels mirror the paper's per-tile pipeline (Section III):
+
+* :func:`frontier_pop` — the fused T4 pop: take the first ``k`` set bits of
+  the frontier bitmap and clear them, compacting the popped vertex indices
+  with a cumsum-rank scatter (no sort) — the task-queue head of Listing 1.
+* :func:`queue_push_pop` — one fused circular-FIFO turn: append this
+  round's fresh tasks and pop the TSU budget off the front in a single
+  kernel, replacing the engine's ``queue_push`` + ``queue_take_front``
+  pair (two argsort compactions) with one scatter + one shift.
+* :func:`edge_scan_gather` — the T2 leg: segment gather over the popped
+  ``(start, stop)`` ranges out of the tile's edge shard.  The head flits of
+  the received messages index straight into local memory — the same
+  "the index IS the route" idiom as ``kernels/spmv``'s scalar-prefetched
+  block-ELL x-gather, applied to the ragged CSR segments.
+* :func:`fold_scatter` — the T3 leg: drain a delivered CQ buffer and
+  scatter-min / scatter-add it into the tile's owned slice of the value
+  array.  Atomic-free by construction: every write targets the tile's own
+  shard (the paper's ownership argument, Section III-A).
+
+All kernels default to ``interpret=True`` so CPU CI executes the very same
+kernel bodies the TPU path compiles, and every kernel is **bit-identical**
+to its XLA twin in ``core/program.py`` / ``core/queues.py`` (the backend
+equivalence contract ``tests/test_backend_pallas.py`` enforces).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# float32 max as a python float (pallas kernels cannot capture traced
+# consts); must equal core.program.INF so the fold's neutral element is the
+# same "unreached" sentinel the XLA legs use.
+_INF = 3.4028234663852886e38
+
+
+# --------------------------------------------------------------------------
+# T4: fused frontier pop (take_first_k as one kernel).
+# --------------------------------------------------------------------------
+
+def _frontier_pop_kernel(k_ref, mask_ref, idx_ref, valid_ref, rem_ref):
+    mask = mask_ref[...]
+    k = k_ref[0]
+    n = mask.shape[0]
+    k_max = idx_ref.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    mi = mask.astype(jnp.int32)
+    rank = jnp.cumsum(mi) - mi            # 0-based rank among set bits
+    take = mask & (rank < k)
+    # rank < k <= k_max for every taken bit, so the scatter stays in-bounds;
+    # slot k_max is the trash slot for the rest.
+    slot = jnp.where(take, rank, jnp.int32(k_max))
+    idx = jnp.zeros((k_max + 1,), jnp.int32).at[slot].set(ar)
+    idx_ref[...] = idx[:k_max]
+    n_take = take.sum(dtype=jnp.int32)
+    valid_ref[...] = jnp.arange(k_max, dtype=jnp.int32) < n_take
+    rem_ref[...] = mask & ~take
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "interpret"))
+def frontier_pop(mask: jax.Array, k: jax.Array, k_max: int,
+                 interpret: bool = True):
+    """Pop the first ``min(k, popcount)`` set bits of the tile's frontier
+    bitmap, FIFO by position — the Pallas twin of
+    :func:`repro.core.program.take_first_k`.
+
+    mask: (n,) bool; k: () int32 dynamic budget (<= k_max).
+    Returns (idx (k_max,) i32, valid (k_max,) bool, cleared_mask (n,) bool).
+    Invalid slots of ``idx`` hold 0 (the XLA twin holds unpopped positions
+    there); both are don't-cares masked by ``valid`` everywhere downstream.
+    """
+    n = mask.shape[0]
+    return pl.pallas_call(
+        _frontier_pop_kernel,
+        out_shape=(jax.ShapeDtypeStruct((k_max,), jnp.int32),
+                   jax.ShapeDtypeStruct((k_max,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)),
+        interpret=interpret,
+    )(jnp.asarray(k, jnp.int32).reshape(1), mask)
+
+
+# --------------------------------------------------------------------------
+# Fused circular-FIFO turn: push fresh tasks, pop the TSU budget.
+# --------------------------------------------------------------------------
+
+def _queue_push_pop_kernel(n_ref, data_ref, count_ref, rows_ref, pvalid_ref,
+                           taken_ref, tvalid_ref, ndata_ref, ncount_ref,
+                           drops_ref):
+    data = data_ref[...]
+    count = count_ref[0]
+    rows = rows_ref[...]
+    pvalid = pvalid_ref[...]
+    cap, w = data.shape
+    max_n = taken_ref.shape[0]
+    # --- push: append valid fresh rows at the tail (cumsum slot claim) ---
+    mi = pvalid.astype(jnp.int32)
+    offs = count + jnp.cumsum(mi) - mi
+    ok = pvalid & (offs < cap)
+    slot = jnp.where(ok, offs, jnp.int32(cap))  # cap = trash slot
+    ext = jnp.concatenate([data, jnp.zeros((1, w), jnp.int32)], axis=0)
+    data2 = ext.at[slot].set(rows)[:cap]
+    n_push = ok.sum(dtype=jnp.int32)
+    count2 = count + n_push
+    drops_ref[0] = mi.sum() - n_push
+    # --- pop: the front min(n, count2) rows, then shift the queue left ---
+    n_pop = jnp.minimum(n_ref[0], count2)
+    taken_ref[...] = data2[:max_n]
+    tvalid_ref[...] = jnp.arange(max_n, dtype=jnp.int32) < n_pop
+    src = jnp.minimum(jnp.arange(cap, dtype=jnp.int32) + n_pop, cap - 1)
+    ndata_ref[...] = data2[src]
+    ncount_ref[0] = count2 - n_pop
+
+
+@functools.partial(jax.jit, static_argnames=("max_n", "interpret"))
+def queue_push_pop(data: jax.Array, count: jax.Array, rows: jax.Array,
+                   valid: jax.Array, n: jax.Array, max_n: int,
+                   interpret: bool = True):
+    """One fused FIFO turn: ``queue_push(rows[valid])`` then
+    ``queue_take_front(min(n, count'))`` in a single kernel.
+
+    data: (cap, w) i32 queue buffer whose first ``count`` rows are live;
+    rows/valid: the fresh tasks; n: () i32 dynamic pop budget (<= max_n).
+    Returns (taken (max_n, w), taken_valid (max_n,), new_data (cap, w),
+    new_count () i32, drops () i32).  Live rows (< new_count) and the taken
+    buffer are bit-identical to the two-call XLA path; rows at or beyond
+    the live count are unobservable garbage in both backends.
+    """
+    cap = data.shape[0]
+    assert max_n <= cap, f"pop budget bound {max_n} > queue capacity {cap}"
+    taken, tvalid, ndata, ncount, drops = pl.pallas_call(
+        _queue_push_pop_kernel,
+        out_shape=(jax.ShapeDtypeStruct((max_n, data.shape[1]), jnp.int32),
+                   jax.ShapeDtypeStruct((max_n,), jnp.bool_),
+                   jax.ShapeDtypeStruct(data.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(jnp.asarray(n, jnp.int32).reshape(1), data,
+      jnp.asarray(count, jnp.int32).reshape(1), rows, valid)
+    return taken, tvalid, ndata, ncount[0], drops[0]
+
+
+# --------------------------------------------------------------------------
+# T2: segment gather over the tile's edge shard.
+# --------------------------------------------------------------------------
+
+def _edge_scan_kernel(edge_dst_ref, edge_val_ref, start_ref, stop_ref,
+                      rv_ref, nb_ref, w_ref, jvalid_ref, *, e_chunk):
+    start = start_ref[...]
+    stop = stop_ref[...]
+    rv = rv_ref[...]
+    max_t2 = nb_ref.shape[1]
+    length = jnp.where(rv, stop - start, 0)
+    local0 = jnp.where(rv, start % e_chunk, 0)
+    j = jnp.arange(max_t2, dtype=jnp.int32)[None, :]
+    eidx = local0[:, None] + j                    # (R, MAX_T2)
+    jvalid = rv[:, None] & (j < length[:, None])
+    eidx_c = jnp.minimum(eidx, e_chunk - 1)
+    nb = edge_dst_ref[...][eidx_c]
+    nb_ref[...] = nb
+    w_ref[...] = edge_val_ref[...][eidx_c]
+    jvalid_ref[...] = jvalid & (nb >= 0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_t2", "interpret"))
+def edge_scan_gather(edge_dst: jax.Array, edge_val: jax.Array,
+                     start: jax.Array, stop: jax.Array, rv: jax.Array,
+                     max_t2: int, interpret: bool = True):
+    """The T2 segment gather: for each delivered range message, read its
+    ``[start, stop)`` slice (bounded by MAX_T2 upstream) out of the tile's
+    VMEM-resident edge shard.
+
+    The head flit is the address — the received global edge index maps to a
+    local offset (``start % e_chunk``) and indexes straight into the shard,
+    the ragged-CSR analogue of ``kernels/spmv``'s scalar-prefetched column
+    index.  Returns (nb (R, max_t2) i32, w (R, max_t2) f32,
+    jvalid (R, max_t2) bool), bit-identical to the inline XLA gather in
+    :func:`repro.core.program.edge_scan`.
+    """
+    e_chunk = edge_dst.shape[0]
+    r = start.shape[0]
+    return pl.pallas_call(
+        functools.partial(_edge_scan_kernel, e_chunk=e_chunk),
+        out_shape=(jax.ShapeDtypeStruct((r, max_t2), jnp.int32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.float32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.bool_)),
+        interpret=interpret,
+    )(edge_dst, edge_val, start, stop, rv)
+
+
+# --------------------------------------------------------------------------
+# T3: CQ drain + owner-local scatter fold.
+# --------------------------------------------------------------------------
+
+def _fold_scatter_kernel(target_ref, lidx_ref, vals_ref, valid_ref, out_ref,
+                         *, op):
+    target = target_ref[...]
+    lidx = lidx_ref[...]
+    vals = vals_ref[...]
+    valid = valid_ref[...]
+    v_chunk = target.shape[0]
+    neutral = _INF if op == "min" else 0.0
+    # lidx holds v_chunk (the trash slot) for invalid rows already; the
+    # extended buffer absorbs them without a branch.
+    ext = jnp.concatenate(
+        [target, jnp.full((1,), neutral, jnp.float32)])
+    masked = jnp.where(valid, vals, jnp.float32(neutral))
+    if op == "min":
+        ext = ext.at[lidx].min(masked)
+    else:
+        ext = ext.at[lidx].add(masked)
+    out_ref[...] = ext[:v_chunk]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def fold_scatter(target: jax.Array, lidx: jax.Array, vals: jax.Array,
+                 valid: jax.Array, op: str = "min", interpret: bool = True):
+    """The T3 fold: drain a delivered CQ buffer into the tile's owned
+    ``(v_chunk,)`` slice — scatter-min for relaxations, scatter-add for
+    accumulations.  Atomic-free: all writes land in this tile's own shard
+    (Section III-A), so the kernel needs no synchronization.
+
+    target: (v_chunk,) f32; lidx: (R,) i32 local indices with ``v_chunk``
+    as the trash slot for invalid rows; vals/valid: the drained payloads.
+    Bit-identical to the XLA ``ext.at[lidx].min/add`` twin in
+    :func:`repro.core.program.scatter_fold`.
+    """
+    assert op in ("min", "add"), op
+    return pl.pallas_call(
+        functools.partial(_fold_scatter_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct(target.shape, jnp.float32),
+        interpret=interpret,
+    )(target, lidx, vals, valid)
