@@ -10,34 +10,47 @@ paper's two-axis comparison:
 
 * placement — low_order keeps per-destination traffic balanced;
   high_order concentrates hubs (more spills -> more replay energy);
+  low_order_dielocal keeps partitions die-resident (cheap on the hier
+  fabric, where DIE-class express links carry the energy premium);
 * noc — mesh pays the center hotspot, torus wraps pay long-wire energy
-  per flit but shorten routes, ruche express channels cut hop counts;
+  per flit but shorten routes, ruche express channels cut hop counts,
+  hier prices die crossings as the scarce expensive resource;
 * policy — traffic-aware TSU budgets vs the static round-robin rung.
 
 ``pj_per_edge`` is the ladder metric (energy normalized by useful work);
 ``leak_frac`` splits static leakage from dynamic energy so slow corners
-are visibly paying idle-tile leakage, as in the paper's discussion.
+are visibly paying idle-tile leakage, as in the paper's discussion;
+``die_frac`` is the fraction of fabric injections crossing a die
+boundary (0 on the single-die fabrics).
 """
 from __future__ import annotations
 
 from repro.core import algorithms as alg
+from repro.perf import die_crossing_frac
 from benchmarks.common import engine_cfg, perf_cols, pick_root, rmat_graph, \
     stats_row
 
 
 def run(scale: int = 10, T: int = 16,
-        placements=("low_order", "high_order"),
-        nocs=("ideal", "mesh", "torus", "ruche"),
-        policies=("traffic", "static")) -> list[dict]:
+        placements=("low_order", "high_order", "low_order_dielocal"),
+        nocs=("ideal", "mesh", "torus", "ruche", "hier"),
+        policies=("traffic", "static"),
+        ndies: tuple[int, int] = (2, 2)) -> list[dict]:
     g = rmat_graph(scale)
     root = pick_root(g)
+    ndies_y, ndies_x = ndies
     rows = []
-    pgs = {p: alg.prepare(g, T, scheme=p) for p in placements}
+    pgs = {p: alg.prepare(g, T, scheme=p,
+                          dies=ndies if p.endswith("_dielocal") else None)
+           for p in placements}
     for placement in placements:
         for noc in nocs:
             for policy in policies:
+                hier = noc == "hier"
                 cfg = engine_cfg(T=T, noc=noc, policy=policy,
-                                 link_cap=0 if noc == "ideal" else 4)
+                                 link_cap=0 if noc == "ideal" else 4,
+                                 ndies_x=ndies_x if hier else 1,
+                                 ndies_y=ndies_y if hier else 1)
                 res = alg.bfs(pgs[placement], root, cfg)
                 s = stats_row(res.stats)
                 p = perf_cols(res.stats, cfg, T)
@@ -51,6 +64,7 @@ def run(scale: int = 10, T: int = 16,
                     "energy_pj": p["energy_pj"],
                     "pj_per_edge": p["pj_per_edge"],
                     "leak_frac": p["leak_frac"],
+                    "die_frac": round(die_crossing_frac(res.stats), 3),
                     "spills": s["spills_sum"],
                     "drops": s["drops"],
                 })

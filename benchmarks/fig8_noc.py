@@ -16,14 +16,20 @@ source.  Two measurement families:
   An earlier revision claimed torus-vs-mesh "cannot be re-measured
   functionally"; that held only while the fabric was a single ideal
   all_to_all — see DESIGN.md ("NoC subsystem").
+* hierarchy rows (`fig8-hier`, :func:`run_hier`): mesh vs torus vs the
+  multi-die `hier` backend at matched tile counts — die-crossing
+  fraction, DIE-class express traffic, and the die-local placement rung
+  that keeps partitions die-resident (DESIGN.md "Hierarchical NoC").
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import algorithms as alg
-from repro.noc import LOCAL_BWD, LOCAL_FWD, N_CHANNELS, grid_shape
-from benchmarks.common import engine_cfg, pick_root, rmat_graph
+from repro.noc import (LOCAL_BWD, LOCAL_FWD, N_CHANNELS, grid_shape,
+                       make_network)
+from repro.perf import die_crossing_frac, flits_by_class
+from benchmarks.common import engine_cfg, perf_cols, pick_root, rmat_graph
 
 
 def _sort_by_degree(g):
@@ -113,6 +119,60 @@ def _topology_rows(g, T: int) -> list[dict]:
     return out
 
 
+def run_hier(scale: int = 10, T: int = 16,
+             ndies: tuple[int, int] = (2, 2), g=None) -> list[dict]:
+    """The hierarchy column: mesh vs torus vs hier at matched tile counts,
+    plus the die-local placement rung on the hier fabric.
+
+    ``die_frac`` is the fraction of fabric injections that cross at least
+    one die boundary (from ``Stats.die_crossings``); ``die_flits`` the
+    DIE-class express traffic (the hierarchy's scarce resource) — both 0
+    by construction on the flat fabrics, which is the comparison: the
+    same workload at the same tile count, re-priced by what the wiring
+    actually charges for.  Links are uncapped, the same convention as the
+    topology rows above: the telemetry records the *offered* load, so the
+    placement's locality structure is visible rather than drowned in
+    replay re-injections (the capped behavior is fig10's axis).  Rows are
+    deterministic at fixed seed, so ``benchmarks/smoke.py`` baselines
+    them.  ``g`` lets :func:`run` reuse its already-built graph.
+    """
+    if g is None:
+        g = rmat_graph(scale)
+    root = pick_root(g)
+    ndies_y, ndies_x = ndies
+    rows = []
+    corners = [("mesh", "low_order"), ("torus", "low_order"),
+               ("hier", "low_order"), ("hier", "low_order_dielocal")]
+    pgs = {
+        "low_order": alg.prepare(g, T),
+        "low_order_dielocal": alg.prepare(g, T, scheme="low_order_dielocal",
+                                          dies=ndies),
+    }
+    for noc, placement in corners:
+        cfg = engine_cfg(T=T, noc=noc, link_cap=0, ndies_x=ndies_x,
+                         ndies_y=ndies_y)
+        res = alg.bfs(pgs[placement], root, cfg)
+        s = res.stats
+        net = make_network(cfg, T)
+        by_cls = flits_by_class(s, net)
+        p = perf_cols(s, cfg, T)
+        rows.append({
+            "bench": "fig8-hier", "noc": noc, "placement": placement,
+            "ndies": f"{ndies_y}x{ndies_x}" if noc == "hier" else "1x1",
+            "rounds": int(s.rounds),
+            "spills": int(np.asarray(s.spills).sum()),
+            "drops": int(s.drops),
+            "die_frac": round(die_crossing_frac(s), 3),
+            "die_flits": by_cls.get("die", 0),
+            "local_flits": by_cls.get("local", 0),
+            "max_link_occupancy": int(s.max_link_occupancy),
+            "cycles": p["cycles"],
+            "energy_pj": p["energy_pj"],
+            "pj_per_edge": p["pj_per_edge"],
+        })
+    return rows
+
+
 def run(scale: int = 10, T: int = 16) -> list[dict]:
     g = rmat_graph(scale)
     rows = _static_rows(g, T, "")
@@ -132,4 +192,7 @@ def run(scale: int = 10, T: int = 16) -> list[dict]:
         })
     # the torus-vs-mesh-vs-ruche rungs (paper Fig. 8/9) on the live fabric
     rows += _topology_rows(g, T)
+    # the multi-die hierarchy column (beyond-paper: the composition the
+    # paper's >16k-tile scaling implies; PIUMA-style die-of-dies)
+    rows += run_hier(scale, T, g=g)
     return rows

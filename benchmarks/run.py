@@ -35,8 +35,8 @@ def main() -> None:
           "(paper Fig. 10)")
     _emit(fig10_energy.run(
         scale=8 if fast else 10, T=8 if fast else 16,
-        nocs=("ideal", "mesh") if fast else ("ideal", "mesh", "torus",
-                                             "ruche"),
+        nocs=("ideal", "mesh", "hier") if fast else
+             ("ideal", "mesh", "torus", "ruche", "hier"),
         policies=("traffic",) if fast else ("traffic", "static")))
     print("# fig11: engine execution backend, xla vs pallas tile-grid "
           "kernels (interpret)")

@@ -1,10 +1,12 @@
 """Benchmark smoke runner for CI: tiny-scale figure drivers so benchmark
 code cannot rot unnoticed.
 
-Runs the fig5 optimization ladder, the task-graph workloads, and the
-fig11 backend bench (xla vs pallas tile-grid kernels — the CI proof that
-``backend="pallas"`` rows exist and match) at T=4 / scale=6, asserts the
-no-drop invariant and the reference checks on every row, and writes the
+Runs the fig5 optimization ladder, the task-graph workloads, the fig8
+hierarchy column (mesh vs torus vs multi-die hier + die-local placement),
+and the fig11 backend bench (xla vs pallas tile-grid kernels — the CI
+proof that ``backend="pallas"`` rows exist and match) at T=4 / scale=6,
+asserts the no-drop invariant and the reference checks on every row, and
+writes the
 rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
 fig11 rows are additionally written standalone as ``BENCH_FIG11.json``
 (both uploaded as CI artifacts).
@@ -33,7 +35,8 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
-ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend")
+ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend", "placement",
+           "ndies")
 
 
 def row_key(row: dict) -> tuple:
@@ -78,10 +81,13 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.time()
-    from benchmarks import fig5_ablation, fig11_backend, taskgraphs
+    from benchmarks import fig5_ablation, fig8_noc, fig11_backend, taskgraphs
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
+    # the fig8 hierarchy column (mesh vs torus vs hier + die-local
+    # placement) — T=4 becomes a 2x2 grid of 1x2-tile dies
+    rows += fig8_noc.run_hier(scale=args.scale, T=args.tiles, ndies=(2, 1))
     # timing=False + repeat=0: one engine run per row — the wall-clock is
     # discarded anyway, and the baseline-checked artifact stays
     # machine-independent

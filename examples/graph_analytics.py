@@ -7,12 +7,17 @@ task-graph workloads (k-core peeling, 2-hop triangle counting) that the
 generic task-program executor opens beyond the fixed T1/T2/T3 pipeline.
 
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
-      [--preset rmat-small-pallas] [--backend pallas]
+      [--preset rmat-hier] [--backend pallas] [--noc hier]
+      [--ndies-y 2 --ndies-x 2] [--placement low_order_dielocal]
 
-``--preset`` pulls scale/tiles/edge-factor/backend from
-``repro.configs.dalorex_graph.PRESETS``; explicit flags override it.
+``--preset`` pulls scale/tiles/edge-factor/backend/noc/ndies/placement
+from ``repro.configs.dalorex_graph.PRESETS``; explicit flags override it.
 ``--backend pallas`` runs every engine call on the tile-grid kernels
-(bit-identical results; interpret mode on CPU).
+(bit-identical results; interpret mode on CPU).  ``--noc hier`` runs the
+workload table on the multi-die fabric (``--ndies-y x --ndies-x`` dies);
+a ``*_dielocal`` ``--placement`` keeps graph partitions die-resident.
+The NoC ablation table always includes the hier rows with their
+die-crossing fraction.
 """
 import argparse
 import functools
@@ -32,6 +37,13 @@ def main():
     ap.add_argument("--scale", type=int, default=None)
     ap.add_argument("--tiles", type=int, default=None)
     ap.add_argument("--backend", choices=("xla", "pallas"), default=None)
+    ap.add_argument("--noc", default=None,
+                    choices=("ideal", "mesh", "torus", "ruche", "hier"))
+    ap.add_argument("--ndies-y", type=int, default=None)
+    ap.add_argument("--ndies-x", type=int, default=None)
+    ap.add_argument("--placement", default=None,
+                    choices=("low_order", "high_order",
+                             "low_order_dielocal", "high_order_dielocal"))
     args = ap.parse_args()
     wl = PRESETS[args.preset] if args.preset else None
     scale = args.scale if args.scale is not None else \
@@ -40,22 +52,33 @@ def main():
         (wl.tiles if wl else 16)
     backend = args.backend if args.backend is not None else \
         (wl.backend if wl else "xla")
+    noc = args.noc if args.noc is not None else (wl.noc if wl else "ideal")
+    ndies = (args.ndies_y if args.ndies_y is not None else
+             (wl.ndies[0] if wl else 1),
+             args.ndies_x if args.ndies_x is not None else
+             (wl.ndies[1] if wl else 1))
+    placement = args.placement if args.placement is not None else \
+        (wl.placement if wl else "low_order")
+    dies = ndies if placement.endswith("_dielocal") else None
     ef = wl.edge_factor if wl else 10
-    EngineConfig = functools.partial(_EngineConfig, backend=backend)
+    EngineConfig = functools.partial(_EngineConfig, backend=backend,
+                                     noc=noc, ndies_y=ndies[0],
+                                     ndies_x=ndies[1])
 
     n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=1)
     g = CSRGraph.from_edges(n, src, dst, val)
     gs = alg.symmetrize(g)
     root = int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
     print(f"V={g.num_vertices} E={g.num_edges} tiles={tiles} "
-          f"backend={backend}")
+          f"backend={backend} noc={noc} ndies={ndies[0]}x{ndies[1]} "
+          f"placement={placement}")
     print(f"{'app':10s} {'mode':6s} {'rounds':>7s} {'msgs':>9s} "
           f"{'spills':>7s} {'edges':>9s}  check")
 
     for mode in ("async", "bsp"):
         c = EngineConfig(mode=mode)
-        pg = alg.prepare(g, tiles)
-        pgs = alg.prepare(gs, tiles)
+        pg = alg.prepare(g, tiles, scheme=placement, dies=dies)
+        pgs = alg.prepare(gs, tiles, scheme=placement, dies=dies)
         for app in ("bfs", "sssp", "wcc", "pagerank", "spmv"):
             if app == "bfs":
                 res = alg.bfs(pg, root, c)
@@ -87,21 +110,40 @@ def main():
             assert ok, app
             assert int(s.drops) == 0
 
-    # NoC topology ablation: same BFS, four fabrics.  Uncapped links expose
-    # each wiring's hotspot structure; drops stay 0 by construction.
-    print(f"\n{'noc':7s} {'rounds':>7s} {'spills':>7s} {'max_link_occ':>13s} "
-          f"{'avg_hops':>9s}")
+    # NoC topology ablation: same BFS, five fabrics (the hier rows run the
+    # multi-die composition with and without die-local placement — the
+    # die-crossing fraction is the new hierarchy column).  Uncapped links
+    # expose each wiring's hotspot structure; drops stay 0 by construction.
+    from repro.noc import grid_shape
+    from repro.perf import die_crossing_frac
+    rows_, cols_ = grid_shape(tiles)
+    hnd = ndies if ndies != (1, 1) else (2, 2)
+    print(f"\n{'noc':22s} {'rounds':>7s} {'spills':>7s} "
+          f"{'max_link_occ':>13s} {'avg_hops':>9s} {'die_frac':>9s}")
     pg = alg.prepare(g, tiles)
     expect = ref.bfs_ref(g, root)
-    for noc in ("ideal", "mesh", "torus", "ruche"):
-        res = alg.bfs(pg, root, EngineConfig(noc=noc))
+    fabrics = [("ideal", pg), ("mesh", pg), ("torus", pg), ("ruche", pg)]
+    if rows_ % hnd[0] or cols_ % hnd[1]:
+        # a single-die "hier" row would just be the mesh again — say so
+        # instead of printing misleadingly-labeled rows
+        print(f"(hier rows skipped: {rows_}x{cols_} grid not divisible "
+              f"into {hnd[0]}x{hnd[1]} dies)")
+    else:
+        pg_dl = alg.prepare(g, tiles, scheme="low_order_dielocal", dies=hnd)
+        fabrics += [("hier", pg), ("hier+dielocal", pg_dl)]
+    for name, pgx in fabrics:
+        noc_kind = name.split("+")[0]
+        res = alg.bfs(pgx, root, EngineConfig(
+            noc=noc_kind, ndies_y=hnd[0] if noc_kind == "hier" else 1,
+            ndies_x=hnd[1] if noc_kind == "hier" else 1))
         s = res.stats
         hist = np.asarray(s.hop_histogram)
         avg = (hist * np.arange(len(hist))).sum() / max(hist.sum(), 1)
+        die_frac = die_crossing_frac(s)
         assert (res.values == expect).all() and int(s.drops) == 0
-        print(f"{noc:7s} {int(s.rounds):7d} "
+        print(f"{name:22s} {int(s.rounds):7d} "
               f"{int(s.spills_range + s.spills_update):7d} "
-              f"{int(s.max_link_occupancy):13d} {avg:9.2f}")
+              f"{int(s.max_link_occupancy):13d} {avg:9.2f} {die_frac:9.2f}")
 
     # Task-graph workloads on the generic executor: a different T3 fold
     # (k-core peel) and a 4-channel chain (2-hop triangle counting).

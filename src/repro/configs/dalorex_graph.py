@@ -20,6 +20,12 @@ class GraphWorkload:
     # kernels are bit-identical, so presets differ only in what the run
     # exercises (interpret-mode kernel coverage vs plain XLA tracing)
     backend: str = "xla"
+    # NoC fabric + placement: "hier" presets cut the grid into
+    # ndies (= (ndies_y, ndies_x)) dies and pair the fabric with a
+    # die-local placement so partitions stay die-resident
+    noc: str = "ideal"
+    ndies: tuple = (1, 1)
+    placement: str = "low_order"
 
 
 PRESETS = {
@@ -33,6 +39,12 @@ PRESETS = {
     # the tile-grid kernel path end to end (kernels/engine, interpret mode)
     "rmat-small-pallas": GraphWorkload("rmat-small-pallas", scale=10,
                                        backend="pallas"),
+    # the multi-die composition: an 8x8 grid as 2x2 dies of 4x4 meshes,
+    # die-local placement (the shape the paper's >16k-tile scaling story
+    # implies; DESIGN.md "Hierarchical NoC")
+    "rmat-hier": GraphWorkload("rmat-hier", scale=12, tiles=64,
+                               noc="hier", ndies=(2, 2),
+                               placement="low_order_dielocal"),
 }
 
 

@@ -332,5 +332,10 @@ def symmetrize(g: CSRGraph) -> CSRGraph:
 
 
 def prepare(g: CSRGraph, T: int, scheme: str = "low_order",
-            edge_mode: str = "equal_edges") -> PartitionedGraph:
-    return partition_graph(g, T, scheme, edge_mode)
+            edge_mode: str = "equal_edges",
+            dies: tuple[int, int] | None = None) -> PartitionedGraph:
+    """``dies=(ndies_y, ndies_x)`` is required by the ``*_dielocal``
+    placement schemes and must match the hier NoC geometry
+    (``EngineConfig.ndies_y/ndies_x``) for partitions to be die-resident
+    on the fabric that runs them."""
+    return partition_graph(g, T, scheme, edge_mode, dies=dies)

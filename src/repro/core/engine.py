@@ -21,9 +21,12 @@ fold; triangle counting runs a 4-channel chain.  The engine itself is
 workload-agnostic: it only iterates channels.
 
 The fabric between channels is a pluggable :mod:`repro.noc` Network
-selected by ``EngineConfig.noc``: the ideal crossbar, or a physical mesh /
-torus / ruche grid with dimension-ordered routing, per-link capacities, and
-per-link telemetry (``Stats.flits_per_link`` etc.).
+selected by ``EngineConfig.noc``: the ideal crossbar, a physical mesh /
+torus / ruche grid, or the multi-die ``hier`` composition (an
+``ndies_y x ndies_x`` array of intra-die grids joined by DIE-class express
+links), all with dimension-ordered routing, per-link capacities, and
+per-link telemetry (``Stats.flits_per_link``, ``Stats.die_crossings``
+etc.).
 
 Backpressure: routing capacity is finite (endpoint slots *and*, for the
 physical NoCs, per-link flits); overflow *spills* back into the channel's
@@ -125,11 +128,18 @@ class EngineConfig:
     backend: str = "xla"     # "xla" | "pallas"
     pallas_interpret: bool = True
     # --- NoC backend (repro.noc) ---
-    noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche"
+    noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche" | "hier"
     noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
     link_cap: int = 0        # flits per directed link per routing leg (a
                              # round has one leg per channel); 0 = off
     ruche_factor: int = 2    # tiles skipped by a ruche channel (noc="ruche")
+    # hier (die-of-dies) geometry: the grid is cut into ndies_y x ndies_x
+    # equal dies wired internally as hier_base ("mesh" | "torus") and
+    # joined by DIE-class express links; ndies_x = ndies_y = 1 with a mesh
+    # base is bit-identical to noc="mesh" (tests/test_hier.py)
+    ndies_x: int = 1         # die columns (noc="hier")
+    ndies_y: int = 1         # die rows (noc="hier")
+    hier_base: str = "mesh"  # intra-die wiring (noc="hier")
     # --- cycle/energy cost model (repro.perf) ---
     perf: PerfParams = PerfParams()
 
@@ -177,6 +187,9 @@ class Stats(NamedTuple):
     flits_per_link: jax.Array       # (num_links,) cumulative flit traversals
     max_link_occupancy: jax.Array   # () peak per-round per-link occupancy
     hop_histogram: jax.Array        # (max_hops+1,) injections by hop count
+    die_crossings: jax.Array        # (max_die_crossings+1,) injections by
+                                    # die boundaries crossed (bin 0 only,
+                                    # on single-die fabrics)
     # --- cycle/energy model (repro.perf; f32 — magnitudes exceed int32,
     # and the in-loop accumulation is Kahan-compensated so small per-round
     # increments survive far past f32's 2^24 integer ceiling) ---
@@ -202,7 +215,8 @@ class Stats(NamedTuple):
         return self.spills[..., -1]
 
     @staticmethod
-    def zero(num_links: int = 1, max_hops: int = 1, num_channels: int = 2):
+    def zero(num_links: int = 1, max_hops: int = 1, num_channels: int = 2,
+             max_die_crossings: int = 0):
         z = jnp.zeros((), jnp.int32)
         zf = jnp.zeros((), jnp.float32)
         return Stats(z, z,
@@ -211,6 +225,7 @@ class Stats(NamedTuple):
                      z, z, z, z,
                      jnp.zeros((num_links,), jnp.int32), z,
                      jnp.zeros((max_hops + 1,), jnp.int32),
+                     jnp.zeros((max_die_crossings + 1,), jnp.int32),
                      zf, zf)
 
 
@@ -220,7 +235,8 @@ def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
     accumulate with real runs (the ``Stats.zero()`` defaults are not)."""
     prog = as_program(alg)
     net = make_network(cfg, T)
-    return Stats.zero(net.num_links, net.max_hops, len(prog.channels))
+    return Stats.zero(net.num_links, net.max_hops, len(prog.channels),
+                      net.max_die_crossings)
 
 
 class GraphShard(NamedTuple):
@@ -433,6 +449,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         routed = net.route(comm, msgs, mvalid, caps[0], owners[0])
         link_round = routed.link_flits
         hop_round = routed.hop_hist
+        die_round = routed.die_hist
         sents = [routed.sent]
         spillv = [routed.spill_valid]
         edges = jnp.zeros_like(drops)
@@ -453,6 +470,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             routed = net.route(comm, msgs, mvalid, caps[i], owners[i])
             link_round = link_round + routed.link_flits
             hop_round = hop_round + routed.hop_hist
+            die_round = die_round + routed.die_hist
             sents.append(routed.sent)
             spillv.append(routed.spill_valid)
         st, d, work, nspill = comm.run(stage_last, shard, st, routed.recv,
@@ -469,6 +487,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         # per-tile pressure fed back into next round's TSU budgets.
         link_round = comm.psum(link_round)
         hop_round = comm.psum(hop_round)
+        die_round = comm.psum(die_round)
         st = st._replace(net_pressure=comm.run(
             lambda me, lf: net.pressure(me, lf), link_round))
 
@@ -519,6 +538,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             max_link_occupancy=jnp.maximum(stats.max_link_occupancy,
                                            link_g.max()),
             hop_histogram=stats.hop_histogram + glob(hop_round),
+            die_crossings=stats.die_crossings + glob(die_round),
             cycles=cycles_acc,
             energy_pj=energy_acc,
         )
@@ -586,6 +606,7 @@ def run_engine(comm, cfg: EngineConfig, alg, shard: GraphShard,
     zf = jnp.zeros((), jnp.float32)
     st, stats, _, _, _ = jax.lax.while_loop(
         cond, body,
-        (st, Stats.zero(net.num_links, net.max_hops, len(prog.channels)),
+        (st, Stats.zero(net.num_links, net.max_hops, len(prog.channels),
+                        net.max_die_crossings),
          (zf, zf), pending0, jnp.int32(0)))
     return st, stats

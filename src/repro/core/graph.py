@@ -2,21 +2,31 @@
 
 A graph arrives as host-side CSR (numpy). Partitioning applies a placement
 permutation to vertex IDs (``low_order`` = Dalorex scatter, ``high_order`` =
-Tesseract-like chunks, ``degree_interleave`` = degree-aware round-robin),
-rebuilds the CSR in placed order, and splits the four dataset arrays
+Tesseract-like chunks, ``degree_interleave`` = degree-aware round-robin,
+each with a ``*_dielocal`` variant that pins contiguous partitions to the
+dies of the hier NoC), rebuilds the CSR in placed order, and splits the four dataset arrays
 (``ptr``-derived start/degree, ``edge_dst``, ``edge_val``) in equal chunks
 across T shards, exactly as Section III-A prescribes.  The rebuild is pure
 numpy segment arithmetic (repeat/cumsum gathers, no per-vertex Python
 loop), so scale-14+ graphs partition in fractions of a second rather than
 minutes.
 
-Two edge-partition modes reproduce the Fig. 5 "Data-Local" ablation rung:
+Three edge-partition modes; the first two reproduce the Fig. 5
+"Data-Local" ablation rung:
 
 * ``equal_edges``     — Dalorex: each tile owns E/T *adjacent* edges,
   decoupled from vertex ownership (ranges may cross tiles; T1 splits them).
 * ``vertex_aligned``  — Tesseract-like: a tile owns the edges of its own
   vertices; per-tile edge counts are skewed, so chunks are padded to the max
   (the imbalance the paper's placement removes).
+* ``die_aligned``     — the hierarchical composition of the two: the
+  Dalorex equal-chunk scatter applied *within* each run of same-die tiles,
+  padded at run boundaries so a die's edges never drift into another die's
+  chunks.  With die-resident vertices (a ``*_dielocal`` placement) every
+  range message then stays on-die by construction, and only
+  partition-crossing update edges ride the DIE links.  One die degenerates
+  to ``equal_edges`` exactly.  Selected automatically for ``*_dielocal``
+  schemes when ``equal_edges`` was requested.
 """
 from __future__ import annotations
 
@@ -93,10 +103,23 @@ class PartitionedGraph:
 
 
 def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
-                    edge_mode: str = "equal_edges") -> PartitionedGraph:
+                    edge_mode: str = "equal_edges",
+                    dies: tuple[int, int] | None = None,
+                    tile_die: np.ndarray | None = None) -> PartitionedGraph:
+    """``dies=(ndies_y, ndies_x)`` builds the tile -> die map for the
+    ``*_dielocal`` placement schemes from the near-square grid the NoC
+    uses by default; pass an explicit ``tile_die`` for custom grids."""
     V, E = g.num_vertices, g.num_edges
-    deg = g.ptr[1:] - g.ptr[:-1] if scheme == "degree_interleave" else None
-    place, inv = placement(V, T, scheme, deg=deg)
+    deg = (g.ptr[1:] - g.ptr[:-1]
+           if scheme.startswith("degree_interleave") else None)
+    if tile_die is None and dies is not None:
+        from repro.noc.topology import tile_die_map
+        tile_die = tile_die_map(T, 0, *dies)
+    if scheme.endswith("_dielocal") and edge_mode == "equal_edges":
+        # die-resident partitions need die-resident edges, or range
+        # messages chase drifted edge chunks across dies (module docstring)
+        edge_mode = "die_aligned"
+    place, inv = placement(V, T, scheme, deg=deg, tile_die=tile_die)
     v_pad = len(inv)
     vdist = DistSpec(v_pad, T)
 
@@ -128,6 +151,34 @@ def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
         edge_dst[dst_idx] = place[g.dst[src_idx]]
         edge_val[dst_idx] = g.val[src_idx]
         ptr_start = new_ptr[:-1]
+    elif edge_mode == "die_aligned":
+        # Equal-chunk scatter per run of consecutive same-die tiles: run r
+        # (tiles t0..t1) owns edge chunks t0..t1, its vertices' edges laid
+        # contiguously from chunk t0 with the padding at the run's tail —
+        # so chunk t always belongs to tile t's die.  One die = one run =
+        # exactly the equal_edges layout (modulo global tail padding).
+        if tile_die is None:
+            raise ValueError("die_aligned edge mode needs dies=/tile_die=")
+        v_chunk = v_pad // T
+        td = np.asarray(tile_die, np.int64)
+        deg_t = deg_placed.reshape(T, v_chunk).sum(1)
+        run_id = np.concatenate([[0], np.cumsum(td[1:] != td[:-1])])
+        run_len = np.bincount(run_id)
+        run_edges = np.bincount(run_id, weights=deg_t).astype(np.int64)
+        e_chunk = int(max(np.ceil(run_edges / run_len).max(), 1))
+        e_pad = e_chunk * T
+        edist = DistSpec(e_pad, T)
+        edge_dst = np.full(e_pad, -1, np.int64)
+        edge_val = np.zeros(e_pad, np.float32)
+        # exclusive edge prefix per placed vertex, restarted at run starts
+        cum = np.cumsum(deg_placed) - deg_placed
+        _, run_first_tile = np.unique(run_id, return_index=True)
+        vert_run = run_id[np.arange(v_pad) // v_chunk]
+        base = run_first_tile[vert_run]
+        ptr_start = base * e_chunk + (cum - cum[base * v_chunk])
+        dst_idx = np.repeat(ptr_start[ok_p], d) + within
+        edge_dst[dst_idx] = place[g.dst[src_idx]]
+        edge_val[dst_idx] = g.val[src_idx]
     elif edge_mode == "vertex_aligned":
         # Each tile owns its vertices' edges; pad every tile to the max count.
         v_chunk = v_pad // T

@@ -3,13 +3,15 @@
 See :mod:`repro.noc.network` for the backend contract and
 :mod:`repro.noc.topology` for the grid/link model.
 """
-from repro.noc.network import (IdealAllToAll, Mesh2D, NetRouted, Ruche,
-                               Torus2D, make_network)
-from repro.noc.topology import (LOCAL_BWD, LOCAL_FWD, N_CHANNELS, RUCHE_BWD,
-                                RUCHE_FWD, admit, grid_shape, line_usage)
+from repro.noc.network import (Hier2D, IdealAllToAll, Mesh2D, NetRouted,
+                               Ruche, Torus2D, make_network)
+from repro.noc.topology import (DIE_BWD, DIE_FWD, LOCAL_BWD, LOCAL_FWD,
+                                N_CHANNELS, RUCHE_BWD, RUCHE_FWD, admit,
+                                grid_shape, line_usage, tile_die_map)
 
 __all__ = [
-    "IdealAllToAll", "Mesh2D", "Torus2D", "Ruche", "NetRouted",
-    "make_network", "grid_shape", "line_usage", "admit", "N_CHANNELS",
-    "LOCAL_FWD", "LOCAL_BWD", "RUCHE_FWD", "RUCHE_BWD",
+    "IdealAllToAll", "Mesh2D", "Torus2D", "Ruche", "Hier2D", "NetRouted",
+    "make_network", "grid_shape", "line_usage", "admit", "tile_die_map",
+    "N_CHANNELS", "LOCAL_FWD", "LOCAL_BWD", "RUCHE_FWD", "RUCHE_BWD",
+    "DIE_FWD", "DIE_BWD",
 ]

@@ -27,12 +27,34 @@ Backends:
   the same spill-and-replay backpressure the endpoint queues use;
   telemetry counts every link traversal and the hop distance of every
   injection.
+* :class:`Hier2D` — the multi-die composition: an ``ndies_y x ndies_x``
+  array of intra-die meshes (or tori) whose lines are joined by inter-die
+  express links (PIUMA-style die-of-dies).  Routing stays dimension-
+  ordered; along each axis a cross-die journey completes its die-level
+  express hops before the intra-die final approach.  At ``ndies = 1x1``
+  it *is* the mesh/torus backend, link for link.
 
 Link index space of the grid backends (``num_links = 8 * T``): an X block
 ``(rows, N_CHANNELS, cols)`` — the links of each row line — followed by a
 Y block ``(cols, N_CHANNELS, rows)`` — the links of each column line —
 both flattened.  Per-round occupancy of link ``l`` is the number of flits
 that traversed it that round, summed over all tiles (``psum``).
+
+Link-class contract: every backend exposes ``link_classes`` — a static
+(num_links,) int32 vector attributing each directed link to one cost
+class of :mod:`repro.noc.topology`, priced by :mod:`repro.perf`:
+
+  ``LOCAL``  neighbor hop on a line           (1-tile wire)
+  ``RUCHE``  ruche express channel            (``ruche_factor``-tile wire)
+  ``WRAP``   torus ring-closing link          (longest wire on the line)
+  ``PORT``   ideal-crossbar ingress port      (switch only, no wire)
+  ``DIE``    hier die-to-die express link     (off-die wire + serdes)
+
+Classes are a wiring property (what kind of wire the flit rides), not a
+traffic property: links of an unused class simply never see flits (a mesh
+carries RUCHE-class channel slots, a one-die hierarchy carries no
+DIE-class traffic), which is what keeps telemetry and energy totals
+bit-comparable across backends of identical geometry.
 """
 from __future__ import annotations
 
@@ -47,6 +69,12 @@ from repro.core.queues import histogram
 from repro.core.routing import bin_by_owner, route_tasks
 from repro.noc.topology import (CLASS_PORT, N_CHANNELS, admit, grid_shape,
                                 line_link_classes, line_usage)
+
+
+def _die_coord(pos, seg: int):
+    """Die index of a 1-D position under segment length ``seg`` (0 = the
+    axis is not segmented; everything is die 0)."""
+    return pos // seg if seg > 0 else jnp.zeros_like(pos)
 
 
 class NetRouted(NamedTuple):
@@ -66,6 +94,12 @@ class NetRouted(NamedTuple):
                 at a waypoint is histogrammed again with its remaining
                 distance when re-injected, so under heavy backpressure the
                 histogram counts injection attempts, not unique messages.
+    die_hist:   (max_die_crossings + 1,) int32 — histogram of the number
+                of die boundaries each fabric injection still has to
+                cross (X + Y).  Non-hierarchical backends put every
+                injection in bin 0; same injection-attempt caveat as
+                ``hop_hist`` (a replay from a waypoint re-buckets with
+                its remaining crossings).
     """
 
     recv: jax.Array
@@ -75,6 +109,7 @@ class NetRouted(NamedTuple):
     sent: jax.Array
     link_flits: jax.Array
     hop_hist: jax.Array
+    die_hist: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +128,10 @@ class IdealAllToAll:
         return 1
 
     @property
+    def max_die_crossings(self) -> int:
+        return 0  # one die (one crossbar); die_hist is a single bin
+
+    @property
     def link_classes(self) -> np.ndarray:
         """Crossbar ingress ports: switch energy per flit, no wire
         latency (endpoint serialization lives in the compute term)."""
@@ -106,11 +145,12 @@ class IdealAllToAll:
         def telemetry(_me, d, v, spill_v, n_sent):
             link = histogram(d, v & ~spill_v, T)  # per-ingress-port flits
             hop = jnp.stack([jnp.zeros((), jnp.int32), n_sent])
-            return link, hop
+            return link, hop, n_sent[None]  # die_hist: everything in bin 0
 
-        link, hop = comm.run(telemetry, dest, valid, r.spill_valid, r.sent)
+        link, hop, die = comm.run(telemetry, dest, valid, r.spill_valid,
+                                  r.sent)
         return NetRouted(r.recv, r.recv_valid, r.spill, r.spill_valid,
-                         r.sent, link, hop)
+                         r.sent, link, hop, die)
 
     def pressure(self, me, link_flits):
         """Occupancy of this tile's ingress port last round."""
@@ -146,6 +186,16 @@ class _Grid2D:
         return 0
 
     @property
+    def die_x(self) -> int:
+        """Die segment length of the X (row) lines; 0 = unsegmented."""
+        return 0
+
+    @property
+    def die_y(self) -> int:
+        """Die segment length of the Y (column) lines; 0 = unsegmented."""
+        return 0
+
+    @property
     def num_links(self) -> int:
         return 2 * N_CHANNELS * self.T  # X block + Y block
 
@@ -156,20 +206,30 @@ class _Grid2D:
         return max(self.cols - 1 + self.rows - 1, 1)
 
     @property
+    def max_die_crossings(self) -> int:
+        return 0  # single-die grids: die_hist is one bin
+
+    @property
     def link_classes(self) -> np.ndarray:
         """Per-link cost class in the link index space (X block then Y
-        block) — ruche express channels and torus wraparounds are priced
-        differently from local neighbor hops by the perf model."""
-        x = np.broadcast_to(line_link_classes(self.cols, self.wrap),
+        block) — ruche express channels, torus wraparounds and hier
+        die-to-die links are priced differently from local neighbor hops
+        by the perf model (see the module docstring's link-class
+        contract)."""
+        x = np.broadcast_to(line_link_classes(self.cols, self.wrap,
+                                              self.die_x),
                             (self.rows, N_CHANNELS, self.cols))
-        y = np.broadcast_to(line_link_classes(self.rows, self.wrap),
+        y = np.broadcast_to(line_link_classes(self.rows, self.wrap,
+                                              self.die_y),
                             (self.cols, N_CHANNELS, self.rows))
         return np.concatenate([x.reshape(-1), y.reshape(-1)])
 
     def route(self, comm, msgs, valid, capacity: int, dest_fn) -> NetRouted:
         T, rows, cols = self.T, self.rows, self.cols
         wrap, ruche, cap = self.wrap, self.ruche, self.link_cap
+        die_x, die_y = self.die_x, self.die_y
         n_hop = self.max_hops + 1
+        n_die = self.max_die_crossings + 1
         tid = jnp.arange(T, dtype=jnp.int32)
 
         # Link capacity is global: tiles sharing a line admit in tile-major
@@ -181,15 +241,19 @@ class _Grid2D:
             d = jnp.clip(dest_fn(m), 0, T - 1)
             dr, dc = d // cols, d % cols
             hx, use_x = line_usage(jnp.broadcast_to(c_me, dc.shape), dc,
-                                   cols, wrap, ruche)
+                                   cols, wrap, ruche, die_x)
             hy, _ = line_usage(jnp.broadcast_to(r_me, dr.shape), dr,
-                               rows, wrap, ruche)
+                               rows, wrap, ruche, die_y)
+            cross = (jnp.abs(_die_coord(dc, die_x) - _die_coord(c_me, die_x))
+                     + jnp.abs(_die_coord(dr, die_y)
+                               - _die_coord(r_me, die_y)))
             claims = (use_x & v[:, None, None]).sum(0, dtype=jnp.int32)
-            return dc, hx + hy, use_x, claims
+            return dc, hx + hy, cross, use_x, claims
 
-        def phase_x(me, m, v, dc, hops, use_x, base):
+        def phase_x(me, m, v, dc, hops, cross, use_x, base):
             # X leg: ride the own-row line to the destination column; also
-            # record the full X+Y hop distance of every admitted injection.
+            # record the full X+Y hop distance and the remaining die
+            # crossings of every admitted injection.
             r_me, c_me = me // cols, me % cols
             ok = admit(use_x, v, cap, base)
             buf, _, ep_spill, _ = bin_by_owner(m, v & ok, r_me * cols + dc,
@@ -199,7 +263,8 @@ class _Grid2D:
             lx = jnp.zeros((rows, N_CHANNELS, cols), jnp.int32).at[r_me].add(
                 (use_x & sent_mask[:, None, None]).sum(0, dtype=jnp.int32))
             hop = histogram(hops, sent_mask, n_hop)
-            return buf, m, spill_v, lx.reshape(-1), hop
+            die = histogram(cross, sent_mask, n_die)
+            return buf, m, spill_v, lx.reshape(-1), hop, die
 
         def x_base(me, all_claims):
             # standing claims of tiles earlier on my row line (tile-major)
@@ -207,13 +272,13 @@ class _Grid2D:
             earlier = (tid // cols == r_me) & (tid % cols < c_me)
             return jnp.where(earlier[:, None, None], all_claims, 0).sum(0)
 
-        dc, hops, use_x, claims_x = comm.run(x_geom, msgs, valid)
+        dc, hops, cross, use_x, claims_x = comm.run(x_geom, msgs, valid)
         if cap > 0:
             base_x = comm.run(x_base, comm.all_gather(claims_x))
         else:  # uncapped: admit() ignores claims — skip the exchange
             base_x = claims_x * 0
-        bufx, spill1, spill1_v, lx, hop = comm.run(
-            phase_x, msgs, valid, dc, hops, use_x, base_x)
+        bufx, spill1, spill1_v, lx, hop, die = comm.run(
+            phase_x, msgs, valid, dc, hops, cross, use_x, base_x)
         mid = comm.a2a(bufx)
 
         def y_geom(me, rec):
@@ -222,7 +287,7 @@ class _Grid2D:
             d = jnp.clip(dest_fn(rec), 0, T - 1)
             dr = d // cols
             _, use_y = line_usage(jnp.broadcast_to(r_me, dr.shape), dr,
-                                  rows, wrap, ruche)
+                                  rows, wrap, ruche, die_y)
             claims = (use_y & v[:, None, None]).sum(0, dtype=jnp.int32)
             return dr, use_y, claims
 
@@ -262,7 +327,7 @@ class _Grid2D:
         spill_v = jnp.concatenate([spill1_v, spill2_v], axis=-1)
         link = jnp.concatenate([lx, ly], axis=-1)
         return NetRouted(recv, recv[..., 0] >= 0, spill, spill_v, sent,
-                         link, hop)
+                         link, hop, die)
 
     def pressure_limit(self, cfg, route_caps=None) -> int:
         """TSU "fabric hot" threshold.  A link sees up to ``link_cap`` flits
@@ -314,6 +379,59 @@ class Ruche(_Grid2D):
         return max(self.ruche_factor, 2)
 
 
+@dataclasses.dataclass(frozen=True)
+class Hier2D(_Grid2D):
+    """Multi-die hierarchical NoC: an ``ndies_y x ndies_x`` array of
+    intra-die grids joined by DIE-class express links (module docstring).
+
+    ``base`` selects the intra-die wiring: ``"mesh"`` (monotone lines) or
+    ``"torus"`` (each die closes its own rings; the wrap shortcut applies
+    to die-local traffic).  The global grid is still (rows, cols) with the
+    same link index space as the flat backends, so ``ndies_x = ndies_y =
+    1`` with a mesh base is **bit-identical** to :class:`Mesh2D` — same
+    links, same routes, same telemetry — which is the equivalence anchor
+    the tests pin down.  ``max_hops`` keeps the flat-mesh bound (a valid
+    upper bound for every die shape, and the histogram shape that makes
+    the ndies=1 Stats comparable).
+    """
+
+    ndies_x: int = 1
+    ndies_y: int = 1
+    base: str = "mesh"
+    name = "hier"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.base not in ("mesh", "torus"):
+            raise ValueError(f"hier base must be mesh|torus, got "
+                             f"{self.base!r}")
+        if (self.ndies_x <= 0 or self.ndies_y <= 0
+                or self.cols % self.ndies_x or self.rows % self.ndies_y):
+            raise ValueError(
+                f"{self.rows}x{self.cols} grid not divisible into "
+                f"{self.ndies_y}x{self.ndies_x} dies")
+
+    @property
+    def wrap(self) -> bool:
+        return self.base == "torus"
+
+    @property
+    def die_x(self) -> int:
+        return self.cols // self.ndies_x
+
+    @property
+    def die_y(self) -> int:
+        return self.rows // self.ndies_y
+
+    @property
+    def max_hops(self) -> int:
+        return max(self.cols - 1 + self.rows - 1, 1)
+
+    @property
+    def max_die_crossings(self) -> int:
+        return self.ndies_x - 1 + self.ndies_y - 1
+
+
 def make_network(cfg, T: int):
     """Build the backend selected by ``EngineConfig.noc`` for a T-tile run."""
     if cfg.noc == "ideal":
@@ -325,4 +443,8 @@ def make_network(cfg, T: int):
         return Torus2D(T, rows, cols, cfg.link_cap)
     if cfg.noc == "ruche":
         return Ruche(T, rows, cols, cfg.link_cap, cfg.ruche_factor)
+    if cfg.noc == "hier":
+        return Hier2D(T, rows, cols, cfg.link_cap,
+                      ndies_x=cfg.ndies_x, ndies_y=cfg.ndies_y,
+                      base=cfg.hier_base)
     raise ValueError(f"unknown noc backend {cfg.noc!r}")

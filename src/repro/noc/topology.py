@@ -11,6 +11,15 @@ tiles:
 * ruche — mesh plus long-range "ruche" channels that skip ``R`` tiles
   (HammerBlade-style); travel greedily rides ruche channels while the
   remaining distance allows, then finishes on local links.
+* hier  — the line is segmented into ``n // die`` die segments of ``die``
+  tiles each (PIUMA-style die-of-dies, one axis of it): local links exist
+  only *within* a segment, and adjacent segments are joined by inter-die
+  express links between their gateway tiles.  Cross-die travel rides
+  local links to the source die's gateway, then one express hop per die
+  boundary, then local links from the destination die's gateway — the
+  die-level journey completes before the intra-die final approach.  With
+  ``wrap=True`` each segment additionally closes its own ring (intra-die
+  torus); the wrap shortcut applies to die-local travel only.
 
 Directed links on a line of ``n`` tiles are indexed by their *source*
 position in four channel classes (unused classes/positions simply never
@@ -18,8 +27,13 @@ see traffic):
 
   ``LOCAL_FWD``  i -> i+1   (torus: i -> (i+1) % n)
   ``LOCAL_BWD``  i -> i-1   (torus: i -> (i-1) % n)
-  ``RUCHE_FWD``  i -> i+R
-  ``RUCHE_BWD``  i -> i-R
+  ``RUCHE_FWD``  i -> i+R   (hier: gateway i -> gateway i+die, DIE class)
+  ``RUCHE_BWD``  i -> i-R   (hier: gateway i -> gateway i-die, DIE class)
+
+The hier express links reuse the ruche channel slots (a line is either
+ruched or segmented, never both): ``DIE_FWD`` links exist at the forward
+gateways (segment-end positions, ``i % die == die-1``) and ``DIE_BWD`` at
+the backward gateways (segment-start positions, ``i % die == 0``).
 
 :func:`admit` implements the per-link analogue of the channel-queue
 backpressure in ``core.routing``: a message is admitted into the fabric for
@@ -39,12 +53,17 @@ import numpy as np
 
 N_CHANNELS = 4
 LOCAL_FWD, LOCAL_BWD, RUCHE_FWD, RUCHE_BWD = range(N_CHANNELS)
+# the hier backend's inter-die express links live on the (otherwise
+# unused) ruche channel slots
+DIE_FWD, DIE_BWD = RUCHE_FWD, RUCHE_BWD
 
 # Cost classes of directed links — a topology property (what kind of wire
 # a flit rides), priced by the repro.perf model.  PORT is the ideal
-# crossbar's ingress ports: no wire latency, switch energy only.
-CLASS_LOCAL, CLASS_RUCHE, CLASS_WRAP, CLASS_PORT = 0, 1, 2, 3
-N_LINK_CLASSES = 4
+# crossbar's ingress ports: no wire latency, switch energy only.  DIE is
+# the hier backend's die-to-die express links: few of them, each driving
+# an off-die wire (serdes crossing), so they are the priciest class.
+CLASS_LOCAL, CLASS_RUCHE, CLASS_WRAP, CLASS_PORT, CLASS_DIE = range(5)
+N_LINK_CLASSES = 5
 
 
 def grid_shape(T: int, rows: int = 0) -> tuple[int, int]:
@@ -58,18 +77,65 @@ def grid_shape(T: int, rows: int = 0) -> tuple[int, int]:
     return rows, T // rows
 
 
-def line_usage(a, b, n: int, wrap: bool = False, ruche: int = 0):
+def line_usage(a, b, n: int, wrap: bool = False, ruche: int = 0,
+               die: int = 0):
     """Per-link usage of travel ``a -> b`` along one axis of the grid.
 
     a, b: (N,) int32 positions in [0, n).  Returns ``(hops, use)`` where
     ``hops`` is (N,) int32 and ``use`` is (N, N_CHANNELS, n) bool marking
     every directed link each message traverses.
+
+    ``die`` > 0 segments the line into dies of ``die`` tiles (see module
+    docstring): die-local travel behaves like a ``die``-tile mesh line
+    (torus line when ``wrap``), cross-die travel is gateway -> express ->
+    gateway with the express hops on the DIE_FWD/DIE_BWD channel slots.
+    ``die in (0, n)`` degenerates to the unsegmented wirings, so a
+    one-die hierarchy is *exactly* a mesh/torus line.
     """
     a = a.astype(jnp.int32)
     b = b.astype(jnp.int32)
     ln = jnp.arange(n, dtype=jnp.int32)[None, :]
     a_, b_ = a[:, None], b[:, None]
     zero = jnp.zeros(a_.shape[:1] + (n,), bool)
+    if 0 < die < n:
+        assert n % die == 0, (n, die)
+        m = die
+        da_, db_ = a_ // m, b_ // m
+        oa_ = a_ % m
+        ln_d, ln_o = ln // m, ln % m
+        same = (a // m) == (b // m)
+        # die-local travel: a ``m``-tile mesh line (torus line if wrap)
+        if wrap:
+            dmod = (b - a) % m
+            fwd_s = dmod <= m // 2
+            hops_s = jnp.where(fwd_s, dmod, m - dmod)
+            seg = ln_d == da_
+            use_f_s = ((same & fwd_s)[:, None] & seg
+                       & (((ln_o - oa_) % m) < dmod[:, None]))
+            use_b_s = ((same & ~fwd_s)[:, None] & seg
+                       & (((oa_ - ln_o) % m) < (m - dmod)[:, None]))
+        else:
+            fwd_s = (b - a) >= 0
+            hops_s = jnp.abs(b - a)
+            use_f_s = (same & fwd_s)[:, None] & (ln >= a_) & (ln < b_)
+            use_b_s = (same & ~fwd_s)[:, None] & (ln <= a_) & (ln > b_)
+        # cross-die: monotone to the own gateway, one express hop per die
+        # boundary, monotone from the destination gateway
+        cf = (b // m) > (a // m)
+        cb = ~same & ~cf
+        hops_cf = (m - 1 - a % m) + (b // m - a // m) + (m - 1 - b % m)
+        hops_cb = (a % m) + (a // m - b // m) + (b % m)
+        cf_, cb_ = cf[:, None], cb[:, None]
+        use_f = (use_f_s
+                 | (cf_ & (ln_d == da_) & (ln >= a_) & (ln_o < m - 1))
+                 | (cb_ & (ln_d == db_) & (ln < b_)))
+        use_b = (use_b_s
+                 | (cf_ & (ln_d == db_) & (ln > b_))
+                 | (cb_ & (ln_d == da_) & (ln <= a_) & (ln_o > 0)))
+        use_df = cf_ & (ln_o == m - 1) & (ln_d >= da_) & (ln_d < db_)
+        use_db = cb_ & (ln_o == 0) & (ln_d <= da_) & (ln_d > db_)
+        hops = jnp.where(same, hops_s, jnp.where(cf, hops_cf, hops_cb))
+        return hops, jnp.stack([use_f, use_b, use_df, use_db], axis=1)
     if wrap:
         d = (b - a) % n
         fwd = d <= n // 2
@@ -100,25 +166,49 @@ def line_usage(a, b, n: int, wrap: bool = False, ruche: int = 0):
     return hops, jnp.stack([use_f, use_b, use_rf, use_rb], axis=1)
 
 
-def line_link_classes(n: int, wrap: bool = False) -> np.ndarray:
+def line_link_classes(n: int, wrap: bool = False, die: int = 0) -> np.ndarray:
     """Cost-class id of every directed link on one line of ``n`` tiles.
 
     Returns (N_CHANNELS, n) int32 in the perf model's class space: the
     RUCHE_FWD/RUCHE_BWD channels are express links (CLASS_RUCHE — they
-    drive ``ruche_factor``-long wires); on a torus line the two links that
-    close the ring — source position ``n-1`` forward and ``0`` backward,
-    exactly the links :func:`line_usage` charges for a wraparound
-    traversal — are CLASS_WRAP (the longest wire on the line); everything
-    else is a CLASS_LOCAL neighbor hop.  Static numpy: the engine bakes
-    the resulting per-link cost vectors into the compiled round.
+    drive ``ruche_factor``-long wires), or CLASS_DIE inter-die express
+    links when the line is segmented (``die`` > 0); on a torus line the
+    two links that close each ring — source position ``n-1`` forward and
+    ``0`` backward per segment, exactly the links :func:`line_usage`
+    charges for a wraparound traversal — are CLASS_WRAP (the longest wire
+    on the line); everything else is a CLASS_LOCAL neighbor hop.  Static
+    numpy: the engine bakes the resulting per-link cost vectors into the
+    compiled round.
     """
     cls = np.full((N_CHANNELS, n), CLASS_LOCAL, np.int32)
-    cls[RUCHE_FWD] = CLASS_RUCHE
-    cls[RUCHE_BWD] = CLASS_RUCHE
+    express = CLASS_DIE if 0 < die < n else CLASS_RUCHE
+    cls[RUCHE_FWD] = express
+    cls[RUCHE_BWD] = express
     if wrap:
-        cls[LOCAL_FWD, n - 1] = CLASS_WRAP
-        cls[LOCAL_BWD, 0] = CLASS_WRAP
+        m = die if 0 < die < n else n
+        cls[LOCAL_FWD, m - 1::m] = CLASS_WRAP
+        cls[LOCAL_BWD, 0::m] = CLASS_WRAP
     return cls
+
+
+def tile_die_map(T: int, rows: int = 0, ndies_y: int = 1,
+                 ndies_x: int = 1) -> np.ndarray:
+    """(T,) int64 die id of every tile of a (rows, cols) grid cut into an
+    ``ndies_y x ndies_x`` array of equal dies (row-major die numbering).
+
+    This is the placement-side view of the hier backend's geometry: the
+    ``*_dielocal`` schemes in :mod:`repro.core.distribution` consume it to
+    keep graph partitions die-resident.  ``rows=0`` uses the same
+    near-square factorization as :func:`grid_shape`, so placement and
+    fabric agree by default.
+    """
+    rows, cols = grid_shape(T, rows)
+    if rows % ndies_y or cols % ndies_x:
+        raise ValueError(
+            f"{rows}x{cols} grid not divisible into {ndies_y}x{ndies_x} dies")
+    t = np.arange(T, dtype=np.int64)
+    r, c = t // cols, t % cols
+    return (r // (rows // ndies_y)) * ndies_x + c // (cols // ndies_x)
 
 
 def admit(use, valid, cap: int, base=None):

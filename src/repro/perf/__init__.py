@@ -3,15 +3,17 @@
 Turns the engine's round/telemetry counters into modeled time, GTEPS and
 joules — see :mod:`repro.perf.model` for the cost formula and caveats.
 """
-from repro.perf.model import (CLASS_LOCAL, CLASS_PORT, CLASS_RUCHE,
-                              CLASS_WRAP, N_LINK_CLASSES, PerfParams,
-                              derived_metrics, energy_from_totals,
-                              leak_pj, link_cost_vectors, round_energy_pj,
-                              tile_compute_cycles)
+from repro.perf.model import (CLASS_DIE, CLASS_LOCAL, CLASS_PORT,
+                              CLASS_RUCHE, CLASS_WRAP, N_LINK_CLASSES,
+                              PerfParams, derived_metrics,
+                              die_crossing_frac, energy_from_totals,
+                              flits_by_class, leak_pj, link_cost_vectors,
+                              round_energy_pj, tile_compute_cycles)
 
 __all__ = [
-    "PerfParams", "derived_metrics", "energy_from_totals", "leak_pj",
-    "link_cost_vectors", "round_energy_pj", "tile_compute_cycles",
-    "CLASS_LOCAL", "CLASS_RUCHE", "CLASS_WRAP", "CLASS_PORT",
+    "PerfParams", "derived_metrics", "die_crossing_frac",
+    "energy_from_totals", "flits_by_class", "leak_pj", "link_cost_vectors",
+    "round_energy_pj", "tile_compute_cycles",
+    "CLASS_LOCAL", "CLASS_RUCHE", "CLASS_WRAP", "CLASS_PORT", "CLASS_DIE",
     "N_LINK_CLASSES",
 ]

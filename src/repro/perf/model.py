@@ -19,7 +19,8 @@ round, exactly like ``Stats.work_max`` gates work balance.  The second is
 the NoC serialization term: a link that carried F flits this round needed
 at least ``F * t_hop`` cycles of wire time, and links of different classes
 are priced differently (``noc.topology`` attributes every directed link to
-a class: LOCAL neighbor hop, RUCHE express channel, torus WRAP-around).
+a class: LOCAL neighbor hop, RUCHE express channel, torus WRAP-around,
+hier die-to-die DIE link).
 
   energy_round = edges * e_scan + updates * e_fold
                + msgs * (e_push + e_pop) + spills * e_spill
@@ -49,8 +50,9 @@ import numpy as np
 # ports: endpoint serialization is already the per-tile compute term
 # (handlers process one message per event), so a perfect fabric adds no
 # wire latency — but each crossbar traversal still costs switch energy.
-from repro.noc.topology import (CLASS_LOCAL, CLASS_PORT,  # noqa: F401
-                                CLASS_RUCHE, CLASS_WRAP, N_LINK_CLASSES)
+from repro.noc.topology import (CLASS_DIE, CLASS_LOCAL,  # noqa: F401
+                                CLASS_PORT, CLASS_RUCHE, CLASS_WRAP,
+                                N_LINK_CLASSES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +80,8 @@ class PerfParams:
     t_hop_ruche: int = 1      # express channel hop (router bypass)
     t_hop_wrap: int = 2       # torus wraparound (longest wire on the line)
     t_hop_port: int = 0       # ideal-crossbar port: no wire serialization
+    t_hop_die: int = 4        # die-to-die express link (serdes + off-die
+                              # wire: slowest hop class, fewest links)
     t_round: int = 1          # fixed per-round pipeline overhead
     # --- energy costs (pJ) ---
     e_alu: float = 0.5
@@ -87,8 +91,9 @@ class PerfParams:
     e_spill: float = 2.0
     e_hop_local: float = 2.0
     e_hop_ruche: float = 4.0  # ruche_factor-long wire per hop
-    e_hop_wrap: float = 5.0   # cross-die return wire
+    e_hop_wrap: float = 5.0   # ring-closing return wire
     e_hop_port: float = 2.0   # ideal-crossbar switch traversal
+    e_hop_die: float = 12.0   # off-die serdes crossing (hier backend)
     e_leak_tile_cycle: float = 0.05  # static leakage, per tile per cycle
 
     # Derived per-event costs of the two handler kinds ("edges"-tagged
@@ -116,6 +121,7 @@ class PerfParams:
         t[CLASS_RUCHE] = self.t_hop_ruche
         t[CLASS_WRAP] = self.t_hop_wrap
         t[CLASS_PORT] = self.t_hop_port
+        t[CLASS_DIE] = self.t_hop_die
         return t
 
     def hop_energy_table(self) -> np.ndarray:
@@ -124,6 +130,7 @@ class PerfParams:
         e[CLASS_RUCHE] = self.e_hop_ruche
         e[CLASS_WRAP] = self.e_hop_wrap
         e[CLASS_PORT] = self.e_hop_port
+        e[CLASS_DIE] = self.e_hop_die
         return e
 
 
@@ -138,6 +145,31 @@ def link_cost_vectors(params: PerfParams, net):
     cls = np.asarray(net.link_classes)
     return (jnp.asarray(params.hop_cycle_table()[cls]),
             jnp.asarray(params.hop_energy_table()[cls]))
+
+
+def flits_by_class(stats, net) -> dict:
+    """Cumulative flit traversals per link class for an accumulated Stats.
+
+    Returns ``{class_name: flits}`` over the classes that exist on ``net``
+    (a link class with zero links on this wiring is omitted).  This is
+    the per-level telemetry split of the hierarchical study: on the hier
+    backend ``out["die"]`` is the die-to-die express traffic the
+    die-local placements are built to minimize.
+    """
+    names = {CLASS_LOCAL: "local", CLASS_RUCHE: "ruche", CLASS_WRAP: "wrap",
+             CLASS_PORT: "port", CLASS_DIE: "die"}
+    cls = np.asarray(net.link_classes)
+    flits = np.asarray(stats.flits_per_link, np.int64)
+    return {names[c]: int(flits[cls == c].sum())
+            for c in sorted(set(cls.tolist()))}
+
+
+def die_crossing_frac(stats) -> float:
+    """Fraction of fabric injections that crossed at least one die
+    boundary (from ``Stats.die_crossings``; 0.0 on single-die fabrics
+    and on runs with no traffic)."""
+    hist = np.asarray(stats.die_crossings, np.int64)
+    return float(hist[1:].sum()) / max(int(hist.sum()), 1)
 
 
 def tile_compute_cycles(params: PerfParams, pops, pushes, spill_replays,

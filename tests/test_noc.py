@@ -26,8 +26,8 @@ from repro.core.comm import LocalComm
 from repro.core.engine import EngineConfig
 from repro.core.graph import CSRGraph, rmat_edges
 from repro.noc import (LOCAL_BWD, LOCAL_FWD, RUCHE_BWD, RUCHE_FWD,
-                       IdealAllToAll, Mesh2D, Ruche, Torus2D, admit,
-                       grid_shape, line_usage, make_network)
+                       Hier2D, IdealAllToAll, Mesh2D, Ruche, Torus2D,
+                       admit, grid_shape, line_usage, make_network)
 
 BACKENDS = ("ideal", "mesh", "torus", "ruche")
 
@@ -128,6 +128,7 @@ def test_admit_fifo_respects_cap_and_never_starves_head():
     Mesh2D(8, 2, 4, link_cap=1),
     Torus2D(8, 2, 4, link_cap=2),
     Ruche(8, 2, 4, link_cap=1, ruche_factor=2),
+    Hier2D(8, 2, 4, link_cap=1, ndies_x=2, ndies_y=1),
 ])
 def test_route_conserves_and_delivers_to_owner(net):
     T, n, chunk = 8, 24, 16

@@ -63,13 +63,16 @@ def test_policy_mode_matrix_on_physical_nocs(g, pg, noc, policy, mode):
 
 @pytest.mark.pallas
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
-def test_backend_closes_matrix_corner(g, pg, backend):
-    """The (traffic, async, mesh) corner the matrix above leaves open,
-    parametrized over the execution backend: both must reproduce the
-    oracle with zero drops under finite-link backpressure (spill/replay
-    through the fused queue kernel on the pallas side)."""
+@pytest.mark.parametrize("noc", ["mesh", "hier"])
+def test_backend_closes_matrix_corner(g, pg, backend, noc):
+    """The (traffic, async) corner the matrix above leaves open,
+    parametrized over the execution backend and over the flat-vs-
+    hierarchical fabric (hier = 2x1 dies on the 2x2 grid): every
+    combination must reproduce the oracle with zero drops under
+    finite-link backpressure (spill/replay through the fused queue
+    kernel on the pallas side)."""
     root = root_of(g)
-    res = alg.bfs(pg, root, small_cfg(noc="mesh", link_cap=2,
+    res = alg.bfs(pg, root, small_cfg(noc=noc, ndies_y=2, link_cap=2,
                                       policy="traffic", mode="async",
                                       backend=backend))
     np.testing.assert_array_equal(res.values, ref.bfs_ref(g, root))

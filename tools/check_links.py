@@ -1,0 +1,88 @@
+"""Markdown link-check for the repo's front-door docs.
+
+Scans the given markdown files for references to repo files and fails if
+any are dead — so README/DESIGN/benchmarks docs cannot silently rot when
+code moves (the failure mode this repo's docs layer was born with).
+
+Two reference forms are checked, both resolved against the repo root:
+
+* markdown links ``[text](target)`` with a relative target (http(s),
+  mailto and pure #anchor targets are skipped);
+* inline-code path tokens (backticked) that start with a known top-level
+  code directory — ``src/``, ``benchmarks/``, ``examples/``, ``tests/``,
+  ``tools/``, ``.github/`` — e.g. ``src/repro/noc/network.py``.
+
+A token passes if it exists as a file or directory; module-attribute
+spellings like ``benchmarks/fig8_noc.run_hier`` pass when the module file
+(``benchmarks/fig8_noc.py``) exists.  Tokens containing glob characters
+are skipped.
+
+  python tools/check_links.py README.md DESIGN.md benchmarks/README.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CODE_ROOTS = ("src/", "benchmarks/", "examples/", "tests/", "tools/",
+              ".github/")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_TOKEN = re.compile(r"`([^`\s]+)`")
+
+
+def _exists(target: str) -> bool:
+    """True if ``target`` names a repo file/dir, allowing a trailing
+    ``.attr`` module-member suffix on a ``.py`` module."""
+    path = os.path.join(REPO, target.rstrip("/"))
+    if os.path.exists(path):
+        return True
+    # benchmarks/fig8_noc.run_hier -> benchmarks/fig8_noc.py
+    head, _, _ = target.rpartition(".")
+    return bool(head) and os.path.exists(os.path.join(REPO, head + ".py"))
+
+
+def check_file(md_path: str) -> list[str]:
+    """Return human-readable problems for one markdown file."""
+    with open(os.path.join(REPO, md_path)) as f:
+        text = f.read()
+    problems = []
+    seen = set()
+
+    def check(target: str, kind: str):
+        if target in seen or any(ch in target for ch in "*?$"):
+            return
+        seen.add(target)
+        if not _exists(target):
+            problems.append(f"{md_path}: dead {kind} reference {target!r}")
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        check(target, "link")
+    for m in CODE_TOKEN.finditer(text):
+        token = m.group(1)
+        if token.startswith(CODE_ROOTS):
+            check(token, "path")
+    return problems
+
+
+def main(files: list[str]) -> int:
+    problems = []
+    for md in files:
+        if not os.path.exists(os.path.join(REPO, md)):
+            problems.append(f"{md}: file not found")
+            continue
+        problems.extend(check_file(md))
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"link-check OK: {len(files)} file(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or
+                  ["README.md", "DESIGN.md", "benchmarks/README.md"]))
