@@ -48,7 +48,7 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return result, (best if best is not None else 0.0)
 
 
-def stats_row(stats) -> dict:
+def stats_row(stats, queries=None, qps=None) -> dict:
     """Flatten Stats for CSV-ish rows: scalars as ints (floats for the
     cycle/energy model fields), telemetry arrays (flits_per_link,
     hop_histogram) summarized as max/sum.  The per-channel msgs/spills
@@ -56,8 +56,16 @@ def stats_row(stats) -> dict:
     programs (triangles' 4-channel chain) keep their middle channels —
     plus the legacy first/last-channel scalar keys (``msgs_range`` /
     ``msgs_update``) as views, which alias the same channel for
-    single-channel programs."""
+    single-channel programs.
+
+    Serving rows (fig12 / repro.serve) pass ``queries`` and ``qps``; the
+    keys are ADDITIVE — omitted when not given, so the pre-serving
+    baseline rows (BENCH_PR3.baseline.json) stay byte-stable."""
     out = {}
+    if queries is not None:
+        out["queries"] = int(queries)
+    if qps is not None:
+        out["qps"] = round(float(qps), 1)
     for k in stats._fields:
         v = np.asarray(getattr(stats, k))
         if v.ndim == 0:

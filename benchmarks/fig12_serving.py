@@ -1,0 +1,112 @@
+"""fig12: query-serving throughput — batch width x arrival pattern.
+
+Beyond the paper's figures: the paper's machine runs ONE traversal; PR6's
+serving subsystem (src/repro/serve/) batches B concurrent point queries
+through the same engine as vmapped *query lanes*, so rounds, the NoC and
+the TSU are amortized across a request batch.  This bench sweeps batch
+width x arrival pattern (burst / uniform / poisson open loops) x batching
+policy (static batches vs continuous lane recycling) and reports:
+
+* ``qps``        queries per modeled second (the serving headline),
+* ``gteps``      aggregate traversed-edges throughput on the same clock,
+* ``j_per_query``  modeled picojoules per query (leakage priced once on
+  the shared batch makespan, not per lane),
+* ``lat_p50/p95/max``  enqueue -> complete latency in modeled cycles,
+* ``rounds`` vs ``seq_rounds``  shared rounds executed vs what B solo
+  runs would have cost (each lane is bit-identical to its solo run, so
+  the sequential cost is exactly the sum of per-lane rounds).
+
+The ``ok`` column asserts per-query values against the host oracle
+(ref.bfs_ref / sssp_ref) and, for B > 1, the strictly-fewer-rounds
+amortization claim.  Rows feed ``benchmarks/smoke.py`` (baseline-gated)
+and the standalone ``BENCH_FIG12.json`` CI artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import engine_cfg, rmat_graph
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.serve import Frontend
+
+
+def _sources(g, n: int, seed: int = 0) -> np.ndarray:
+    """n query sources with out-edges (deterministic at a seed)."""
+    deg = np.asarray(g.ptr[1:] - g.ptr[:-1])
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.flatnonzero(deg > 0), size=n)
+
+
+def _oracle(g, app: str, sources) -> dict:
+    fn = ref.bfs_ref if app == "bfs" else ref.sssp_ref
+    return {int(s): fn(g, int(s)) for s in set(int(s) for s in sources)}
+
+
+def run(scale: int = 10, T: int = 16, queries: int = 64,
+        widths=(1, 8, 64), app: str = "bfs",
+        arrivals=("burst", "poisson"), gap: float = 20_000.0,
+        backends=("xla",), continuous: bool = True,
+        pallas_width: int = 0, seed: int = 0) -> list[dict]:
+    """One row per (backend x width x arrival) static sweep, plus a
+    continuous-batching row at the widest width, plus (``pallas_width>0``)
+    one backend="pallas" row proving the lanes run on the tile-grid
+    kernels too.  Rows are deterministic (modeled clock only, no wall
+    time) — what smoke.py commits to the baseline."""
+    g = rmat_graph(scale)
+    pg = alg.prepare(g, T)
+    srcs = _sources(g, queries, seed)
+    want = _oracle(g, app, srcs)
+    rows = []
+
+    def serve_row(backend, width, arrival, policy, nq=None):
+        sub = srcs[:nq] if nq else srcs
+        cfg = engine_cfg(T=T, backend=backend)
+        fe = Frontend(pg, app=app, cfg=cfg, width=width, policy=policy)
+        rep = fe.serve(sub, arrival=arrival, gap=gap, seed=seed)
+        # correctness: every streamed query result against the host
+        # oracle (the per-lane == solo-run *bit-identity* is pinned by
+        # tests/test_serve.py)
+        ok = (len(rep.records) == len(sub)
+              and all(np.array_equal(r.values, want[r.source])
+                      for r in rep.records))
+        # amortization: B > 1 must strictly beat sequential rounds
+        if width > 1 and len(sub) > 1:
+            ok = ok and rep.total_rounds < rep.seq_rounds
+        r = rep.row()
+        rung = f"B{width}" + ("-cont" if policy == "continuous" else "")
+        return {
+            "bench": "fig12", "rung": rung, "app": app,
+            "arrival": arrival, "backend": backend, "noc": cfg.noc,
+            "queries": r["queries"], "rounds": r["rounds"],
+            "seq_rounds": r["seq_rounds"], "batches": r["batches"],
+            "qps": r["qps"], "gteps": r["gteps"],
+            "j_per_query": r["j_per_query"],
+            "lat_p50": r["lat_p50"], "lat_p95": r["lat_p95"],
+            "lat_max": r["lat_max"], "cycles": r["cycles"],
+            "energy_pj": r["energy_pj"], "drops": r["drops"], "ok": ok,
+        }
+
+    for backend in backends:
+        for width in widths:
+            for arrival in arrivals:
+                rows.append(serve_row(backend, width, arrival, "static"))
+    if continuous:
+        rows.append(serve_row(backends[0], max(widths), arrivals[0],
+                              "continuous"))
+    if pallas_width:
+        rows.append(serve_row("pallas", pallas_width, arrivals[0],
+                              "static", nq=pallas_width))
+    return rows
+
+
+if __name__ == "__main__":  # PYTHONPATH=src:. python benchmarks/fig12_serving.py [--fast]
+    import sys
+    fast = "--fast" in sys.argv
+    rows = run(scale=8 if fast else 10, T=8 if fast else 16,
+               queries=16 if fast else 64,
+               widths=(1, 8) if fast else (1, 8, 64),
+               arrivals=("burst",) if fast else ("burst", "poisson"),
+               pallas_width=0 if fast else 8)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)

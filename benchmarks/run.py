@@ -16,8 +16,9 @@ def main() -> None:
     fast = "--fast" in sys.argv
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
-                            fig8_noc, fig10_energy, fig11_backend, lm_micro,
-                            roofline, taskgraphs, work_efficiency)
+                            fig8_noc, fig10_energy, fig11_backend,
+                            fig12_serving, lm_micro, roofline, taskgraphs,
+                            work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -44,6 +45,14 @@ def main() -> None:
         scale=8 if fast else 10, T=8 if fast else 16,
         apps=("bfs", "spmv") if fast else fig11_backend.APPS,
         repeat=1 if fast else 2))
+    print("# fig12: query serving — batch width x arrival pattern "
+          "(queries/sec, joules/query)")
+    _emit(fig12_serving.run(
+        scale=8 if fast else 10, T=8 if fast else 16,
+        queries=16 if fast else 64,
+        widths=(1, 8) if fast else (1, 8, 64),
+        arrivals=("burst",) if fast else ("burst", "poisson"),
+        pallas_width=0 if fast else 8))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

@@ -3,13 +3,16 @@ code cannot rot unnoticed.
 
 Runs the fig5 optimization ladder, the task-graph workloads, the fig8
 hierarchy column (mesh vs torus vs multi-die hier + die-local placement),
-and the fig11 backend bench (xla vs pallas tile-grid kernels — the CI
-proof that ``backend="pallas"`` rows exist and match) at T=4 / scale=6,
+the fig11 backend bench (xla vs pallas tile-grid kernels — the CI
+proof that ``backend="pallas"`` rows exist and match), and the fig12
+serving bench (batched query lanes: static + continuous batching +
+a pallas-backend batch, queries/sec rows) at T=4 / scale=6,
 asserts the no-drop invariant and the reference checks on every row, and
 writes the
 rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
-fig11 rows are additionally written standalone as ``BENCH_FIG11.json``
-(both uploaded as CI artifacts).
+fig11 / fig12 rows are additionally written standalone as
+``BENCH_FIG11.json`` / ``BENCH_FIG12.json`` (all uploaded as CI
+artifacts).
 
 If the committed baseline (``benchmarks/BENCH_PR3.baseline.json``) exists,
 every row is matched against it by its identity columns and the run FAILS
@@ -36,7 +39,7 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
 ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend", "placement",
-           "ndies")
+           "ndies", "arrival")
 
 
 def row_key(row: dict) -> tuple:
@@ -73,6 +76,9 @@ def main() -> int:
     ap.add_argument("--fig11-out", default="BENCH_FIG11.json",
                     help="standalone copy of the fig11 backend rows; "
                          "'none' to skip")
+    ap.add_argument("--fig12-out", default="BENCH_FIG12.json",
+                    help="standalone copy of the fig12 serving rows; "
+                         "'none' to skip")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline json to diff rounds against; 'none' "
                          "to skip")
@@ -81,7 +87,8 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.time()
-    from benchmarks import fig5_ablation, fig8_noc, fig11_backend, taskgraphs
+    from benchmarks import (fig5_ablation, fig8_noc, fig11_backend,
+                            fig12_serving, taskgraphs)
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
@@ -95,10 +102,19 @@ def main() -> int:
                               apps=("bfs", "spmv", "triangles"),
                               timing=False, repeat=0)
     rows += fig11
+    # the fig12 serving rows: batched query lanes (static + continuous +
+    # one pallas-backend batch), queries/sec gated like everything else
+    fig12 = fig12_serving.run(scale=args.scale, T=args.tiles, queries=12,
+                              widths=(1, 4), arrivals=("burst", "poisson"),
+                              gap=2000.0, continuous=True, pallas_width=3)
+    rows += fig12
 
     bad = []
     if not any(r.get("backend") == "pallas" for r in rows):
         bad.append("smoke must emit at least one backend=pallas row")
+    if not any(r.get("bench") == "fig12" and r.get("qps", 0) > 0
+               for r in rows):
+        bad.append("smoke must emit fig12 serving rows with qps > 0")
     bad += [r for r in rows if r.get("drops", 0) != 0]
     bad += [r for r in rows if r.get("ok") is False]
     bad += [r for r in rows  # missing perf columns must fail, not pass
@@ -108,6 +124,9 @@ def main() -> int:
     if args.fig11_out != "none":
         with open(args.fig11_out, "w") as f:
             json.dump(fig11, f, indent=1)
+    if args.fig12_out != "none":
+        with open(args.fig12_out, "w") as f:
+            json.dump(fig12, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
     if bad:
         print(f"FAILED rows: {bad}")

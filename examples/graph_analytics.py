@@ -9,6 +9,11 @@ generic task-program executor opens beyond the fixed T1/T2/T3 pipeline.
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
       [--preset rmat-hier] [--backend pallas] [--noc hier]
       [--ndies-y 2 --ndies-x 2] [--placement low_order_dielocal]
+      [--queries 32]
+
+``--queries N`` appends the serving section: N BFS/SSSP sources batched
+through the engine as query lanes (src/repro/serve/), with a queries/sec
+line per app.
 
 ``--preset`` pulls scale/tiles/edge-factor/backend/noc/ndies/placement
 from ``repro.configs.dalorex_graph.PRESETS``; explicit flags override it.
@@ -44,6 +49,10 @@ def main():
     ap.add_argument("--placement", default=None,
                     choices=("low_order", "high_order",
                              "low_order_dielocal", "high_order_dielocal"))
+    ap.add_argument("--queries", type=int, default=0,
+                    help="also serve N batched multi-source BFS/SSSP "
+                         "queries (the repro.serve query lanes) and print "
+                         "a queries/sec line")
     args = ap.parse_args()
     wl = PRESETS[args.preset] if args.preset else None
     scale = args.scale if args.scale is not None else \
@@ -144,6 +153,38 @@ def main():
         print(f"{name:22s} {int(s.rounds):7d} "
               f"{int(s.spills_range + s.spills_update):7d} "
               f"{int(s.max_link_occupancy):13d} {avg:9.2f} {die_frac:9.2f}")
+
+    # Query serving: N BFS/SSSP sources batched through the engine as
+    # vmapped query lanes (src/repro/serve/) — one resident graph, shared
+    # rounds, per-query results identical to solo runs.  The queries/sec
+    # line is the serving headline of benchmarks/fig12_serving.py.
+    if args.queries > 0:
+        from repro.serve import Frontend
+        deg = np.asarray(g.ptr[1:] - g.ptr[:-1])
+        rng = np.random.default_rng(0)
+        srcs = rng.choice(np.flatnonzero(deg > 0), size=args.queries)
+        width = min(args.queries, 16)
+        print(f"\nserving {args.queries} queries, {width} lanes "
+              f"(static batches, burst arrivals)")
+        print(f"{'app':10s} {'rounds':>7s} {'seq_rounds':>10s} "
+              f"{'qps':>12s} {'pJ/query':>10s} {'lat_p95':>8s}  check")
+        for app, rf in (("bfs", ref.bfs_ref), ("sssp", ref.sssp_ref)):
+            fe = Frontend(pg, app=app, cfg=EngineConfig(), width=width)
+            rep = fe.serve(srcs)
+            ok = rep.drops == 0
+            for rec in rep.records:
+                e = rf(g, rec.source)
+                f = np.isfinite(e)
+                ok = ok and bool(np.allclose(rec.values[f], e[f],
+                                             rtol=1e-5)) \
+                    and bool(np.isinf(rec.values[~f]).all())
+            if args.queries > 1:  # batching must amortize rounds
+                ok = ok and rep.total_rounds < rep.seq_rounds
+            print(f"{app:10s} {rep.total_rounds:7d} {rep.seq_rounds:10d} "
+                  f"{rep.qps:12.1f} {rep.j_per_query * 1e12:10.1f} "
+                  f"{rep.latency_cycles(95):8.0f}  "
+                  f"{'OK' if ok else 'FAIL'}")
+            assert ok, app
 
     # Task-graph workloads on the generic executor: a different T3 fold
     # (k-core peel) and a 4-channel chain (2-hop triangle counting).

@@ -67,6 +67,13 @@ traces them inline, "pallas" dispatches to the tile-grid kernels of
 :mod:`repro.kernels.engine` (one grid program = one tile, shard resident
 in VMEM) — bit-identical by contract, per-channel overridable via
 ``TaskSpec.backend`` (DESIGN.md "Pallas backend").
+
+Everything here is single-query; the serving subsystem
+(:mod:`repro.serve`) vmaps the round built by :func:`make_round` over a
+leading *query-lane* axis so a batch of B traversals shares the resident
+graph, the rounds and the fabric, freezing each lane with
+:func:`lane_select` when its own :func:`pending_work` signal hits zero
+(DESIGN.md "Query serving").
 """
 from __future__ import annotations
 
@@ -299,11 +306,35 @@ def _budgets(cfg: EngineConfig, prog: Program, qcaps, pops, st: EngineState,
     return f_pop, jnp.stack(chan_pops)
 
 
-def _pending(me, st: EngineState):
+def pending_work(me, st: EngineState):
+    """Per-device pending work (frontier population + queue occupancies) —
+    the local contribution to the paper's hierarchical idle wire.  Public
+    because the serving lane runner (:mod:`repro.serve.lanes`) computes a
+    *per-query* idle signal from the same definition."""
     p = st.frontier.sum(dtype=jnp.int32)
     for q in st.queues:
         p = p + q.count
     return p
+
+
+_pending = pending_work
+
+
+def lane_select(active: jax.Array, old, new):
+    """Per-lane masked select over matching lane-led pytrees.
+
+    ``active`` is a ``(B,)`` bool vector; every leaf of ``old``/``new`` is
+    lane-led ``(B, ...)``.  Returns ``new`` where the lane is active and
+    ``old`` where it is frozen — the query-lane analogue of BSP's
+    do-nothing round: a finished query's state, Stats and Kahan
+    compensation stop evolving the round its pending work hits zero, which
+    is what keeps each lane's trajectory bit-identical to a solo run
+    (tests/test_serve.py).
+    """
+    def sel(o, n):
+        m = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, old, new)
 
 
 def _next_pending(me, st: EngineState):

@@ -103,6 +103,15 @@ WCC = AlgSpec("wcc", "min", "copy")
 PAGERANK = AlgSpec("pagerank", "add", "copy", parent="value_over_deg")
 SPMV = AlgSpec("spmv", "add", "times_w")
 
+# Name registry of the classic single-program workloads — the one place a
+# front end (repro.serve, examples, benchmarks) resolves an app string to
+# its spec.  The min-kind entries are the *point-query* apps: a single
+# source vertex fully determines the run, which is what makes them
+# servable as batched query lanes (repro.serve.lanes).
+CLASSIC = {a.name: a for a in (BFS, SSSP, WCC, PAGERANK, SPMV)}
+POINT_QUERY_APPS = tuple(sorted(n for n, a in CLASSIC.items()
+                                if a.kind == "min" and n != "wcc"))
+
 
 def _emit(alg: AlgSpec, parent: jax.Array, w: jax.Array) -> jax.Array:
     if alg.emit == "plus1":

@@ -42,6 +42,14 @@ def queue_free(q: Queue) -> jax.Array:
     return q.data.shape[0] - q.count
 
 
+def queue_clear(q: Queue) -> Queue:
+    """An emptied queue of the same shape (and zeroed storage, so cleared
+    queues compare bit-equal to freshly made ones).  Used by the serving
+    front end's lane recycling: a finished query's channel queues are
+    reset in place for the next admitted query, without reallocating."""
+    return Queue(jnp.zeros_like(q.data), jnp.zeros_like(q.count))
+
+
 def queue_push(q: Queue, rows: jax.Array, mask: jax.Array) -> tuple[Queue, jax.Array]:
     """Append ``rows[mask]`` (preserving row order) to the queue tail.
 

@@ -7,7 +7,9 @@ vertex/edge shard.  Under ``LocalComm`` the engine vmaps per-tile stages,
 and Pallas's batching rule turns the vmapped tile axis into a leading grid
 dimension — literally one grid program per tile; under ``AxisComm``
 (shard_map SPMD) each device *is* one tile and the kernels run gridless on
-its shard.  See DESIGN.md "Pallas backend" for the tile-grid mapping, the
+its shard.  The query-lane axis of ``repro.serve`` (the round vmapped over
+``(B,)`` concurrent traversals) rides the same batching rule as one more
+leading grid dimension — a ``(B, T)`` grid of programs, no kernel changes.  See DESIGN.md "Pallas backend" for the tile-grid mapping, the
 per-tile VMEM budget, and the TPU (non-interpret) caveats.
 
 The four kernels mirror the paper's per-tile pipeline (Section III):

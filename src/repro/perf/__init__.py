@@ -8,12 +8,13 @@ from repro.perf.model import (CLASS_DIE, CLASS_LOCAL, CLASS_PORT,
                               PerfParams, derived_metrics,
                               die_crossing_frac, energy_from_totals,
                               flits_by_class, leak_pj, link_cost_vectors,
-                              round_energy_pj, tile_compute_cycles)
+                              round_energy_pj, serving_metrics,
+                              tile_compute_cycles)
 
 __all__ = [
     "PerfParams", "derived_metrics", "die_crossing_frac",
     "energy_from_totals", "flits_by_class", "leak_pj", "link_cost_vectors",
-    "round_energy_pj", "tile_compute_cycles",
+    "round_energy_pj", "serving_metrics", "tile_compute_cycles",
     "CLASS_LOCAL", "CLASS_RUCHE", "CLASS_WRAP", "CLASS_PORT", "CLASS_DIE",
     "N_LINK_CLASSES",
 ]

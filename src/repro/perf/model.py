@@ -221,6 +221,30 @@ def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
             + float(np.asarray(leak_pj(params, T, np.float32(cycles)))))
 
 
+def serving_metrics(queries: int, cycles: float, energy_pj: float,
+                    edges: int, params: PerfParams = None) -> dict:
+    """Throughput columns for a *serving* run (repro.serve): many queries
+    sharing one makespan.  ``cycles``/``energy_pj`` are the batch clock and
+    batch energy of the shared run (NOT per-lane sums — lanes
+    time-multiplex the tiles, so per-lane cycles double-count the fixed
+    round overhead), ``edges`` the total edges scanned across lanes.
+
+    Returns queries/sec (``qps``), modeled joules per query
+    (``j_per_query``), and the aggregate ``gteps`` on the same clock.
+    """
+    params = params or PerfParams()
+    time_s = cycles / (params.f_ghz * 1e9)
+    return {
+        "cycles": int(round(cycles)),
+        "time_model_s": round(time_s, 9),
+        "qps": round(queries / time_s, 1) if time_s > 0 else 0.0,
+        "gteps": round(edges / time_s / 1e9, 6) if time_s > 0 else 0.0,
+        "energy_pj": round(energy_pj, 1),
+        "j_per_query": round(energy_pj * 1e-12 / queries, 15)
+        if queries else 0.0,
+    }
+
+
 def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
     """Time / throughput / energy columns from an accumulated Stats.
 

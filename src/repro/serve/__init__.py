@@ -1,0 +1,26 @@
+"""Multi-tenant query serving over the resident graph (DESIGN.md "Query
+serving").
+
+Layers:
+
+* :mod:`repro.serve.lanes` — the machine side: a batch of B point queries
+  vmapped through the engine round as *query lanes*, bit-identical per
+  lane to B solo runs, priced on a shared batch clock.
+* :mod:`repro.serve.frontend` — the service side: request queue, batch
+  formation (static or continuous/lane-recycling), latency accounting on
+  the modeled cycle clock.
+* ``python -m repro.serve`` — the CLI (:mod:`repro.serve.__main__`).
+"""
+from repro.serve.frontend import (Frontend, QueryRecord, ServeReport,
+                                  arrival_cycles)
+from repro.serve.lanes import (BatchResult, LaneCarry, batch_min_state,
+                               lane_carry, lane_loop, lane_state,
+                               local_lanes_call, local_lanes_segment,
+                               multi_source, spmd_lanes_call)
+
+__all__ = [
+    "BatchResult", "Frontend", "LaneCarry", "QueryRecord", "ServeReport",
+    "arrival_cycles", "batch_min_state", "lane_carry", "lane_loop",
+    "lane_state", "local_lanes_call", "local_lanes_segment", "multi_source",
+    "spmd_lanes_call",
+]

@@ -300,6 +300,52 @@ def test_dielocal_strictly_reduces_die_flits(g):
     assert frac[1] < frac[0], frac
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("ndies,T", [((3, 3), 36), ((4, 4), 64)])
+def test_hier_large_die_arrays_values_and_crossing_conservation(g, ndies,
+                                                                T):
+    """ROADMAP carry-over: pin hier correctness beyond 2x2 — a 3x3 die
+    array (6x6 grid of 2x2-tile dies) and a 4x4 array (8x8 grid of
+    2x2-tile dies).  Values match the oracle with zero drops, and on
+    uncapped links the die-crossing telemetry conserves exactly:
+
+    * DIE-class flits == sum k * die_hist[k] (each injection that crosses
+      k die boundaries rides exactly k DIE links);
+    * die_hist.sum() == hop_hist.sum() (every injection is binned once in
+      both histograms);
+    * total flits == sum k * hop_hist[k] (every flit rides some link).
+    """
+    ny, nx = ndies
+    root = root_of(g)
+    want = ref.bfs_ref(g, root)
+    # queue caps sized for the larger grids (worst-case inflow grows
+    # with T; Program.validate enforces the bound)
+    cfg = small_cfg(noc="hier", ndies_y=ny, ndies_x=nx, link_cap=0,
+                    cap_rangeq=1024, cap_updq=16384)
+    net = make_network(cfg, T)
+    assert net.max_die_crossings == (ny - 1) + (nx - 1)
+    pg = alg.prepare(g, T, scheme="low_order_dielocal", dies=ndies)
+    res = alg.bfs(pg, root, cfg)
+    np.testing.assert_array_equal(res.values, want)
+    assert int(res.stats.drops) == 0
+    die_hist = np.asarray(res.stats.die_crossings, np.int64)
+    hop_hist = np.asarray(res.stats.hop_histogram, np.int64)
+    flits = np.asarray(res.stats.flits_per_link, np.int64)
+    cls = np.asarray(net.link_classes)
+    assert die_hist[1:].sum() > 0  # the workload does cross dies
+    assert flits[cls == CLASS_DIE].sum() == \
+        (die_hist * np.arange(len(die_hist))).sum()
+    assert die_hist.sum() == hop_hist.sum()
+    assert flits.sum() == (hop_hist * np.arange(len(hop_hist))).sum()
+    # and with finite links (spill/replay across the die gateways) the
+    # oracle still holds, drop-free
+    res2 = alg.bfs(pg, root, small_cfg(noc="hier", ndies_y=ny, ndies_x=nx,
+                                       link_cap=2, cap_rangeq=1024,
+                                       cap_updq=16384))
+    np.testing.assert_array_equal(res2.values, want)
+    assert int(res2.stats.drops) == 0
+
+
 def test_hier_multi_die_matches_oracles_under_backpressure(g):
     """ndies=2x2 with link_cap=1 (heavy spill/replay across the scarce
     DIE links) still reproduces the oracle with zero drops, mesh and

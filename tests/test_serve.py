@@ -1,0 +1,348 @@
+"""Query serving (src/repro/serve/): batched lanes == B solo runs.
+
+The contract under test, per DESIGN.md "Query serving":
+
+* **bit-identity** — every lane of a batched ``multi_source`` run carries
+  EXACTLY its solo run's trajectory: values, every per-lane Stats field,
+  and the lane's own round count, across the full (backend x noc x mode)
+  matrix; duplicate sources and padding lanes included;
+* **amortization** — the batch completes in ``max_i rounds_i`` shared
+  rounds, strictly fewer than the ``sum_i rounds_i`` a sequential serve
+  would cost (the acceptance anchor, pinned at B=64 on both backends);
+* **batch clock** — at B=1 the batch makespan/energy degenerate to the
+  solo accumulators exactly (the shared round overhead is priced once);
+* **front end** — static and continuous policies stream records whose
+  rounds/edges/values match solo runs, with monotone latency timestamps
+  and drops == 0; continuous recycling never contaminates a lane;
+* **rows** — ``stats_row`` keeps its pre-serving keys byte-stable (the
+  ``queries``/``qps`` columns are additive).
+
+All tests are marked ``serve`` (their own CI step); the shard_map SPMD
+lane test follows tests/test_spmd.py's subprocess pattern and is slow.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+from repro.serve import (Frontend, QueryRecord, ServeReport, arrival_cycles,
+                         multi_source)
+
+pytestmark = pytest.mark.serve
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=256, cap_updq=4096,
+                max_rounds=20000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def g():
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=0)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return alg.prepare(g, T=8)
+
+
+def sources_of(g, n, seed=0):
+    deg = np.asarray(g.ptr[1:] - g.ptr[:-1])
+    return np.random.default_rng(seed).choice(np.flatnonzero(deg > 0),
+                                              size=n)
+
+
+def solo(pg, app, s, cfg):
+    return (alg.bfs if app == "bfs" else alg.sssp)(pg, int(s), cfg)
+
+
+def assert_lane_is_solo(res, lane, ref_res):
+    """Lane `lane` of a BatchResult == one solo Result, bit for bit:
+    values, the whole Stats tuple, and the round count."""
+    np.testing.assert_array_equal(res.values[lane], ref_res.values)
+    for name in ref_res.stats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.stats, name))[lane],
+            np.asarray(getattr(ref_res.stats, name)),
+            err_msg=f"Stats.{name} lane {lane}")
+
+
+# --------------------------------------------------------------------------
+# Bit-identity across the (backend x noc x mode) matrix.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", [
+    "xla", pytest.param("pallas", marks=pytest.mark.pallas)])
+@pytest.mark.parametrize("noc", ["ideal", "mesh"])
+@pytest.mark.parametrize("mode", ["async", "bsp"])
+def test_batch_lanes_bit_identical_to_solo(g, pg, backend, noc, mode):
+    """B=5 batch (two distinct sources, one duplicate, one padding lane)
+    == the corresponding solo runs, per lane, on every engine variant."""
+    cfg = small_cfg(backend=backend, noc=noc, mode=mode,
+                    link_cap=0 if noc == "ideal" else 2)
+    srcs = sources_of(g, 3, seed=1)
+    batch = [int(srcs[0]), int(srcs[1]), int(srcs[0]), -1, int(srcs[2])]
+    res = multi_source(pg, "bfs", batch, cfg)
+    ref_runs = {int(s): solo(pg, "bfs", s, cfg) for s in srcs}
+    for lane, s in enumerate(batch):
+        if s < 0:
+            continue
+        assert_lane_is_solo(res, lane, ref_runs[s])
+        np.testing.assert_array_equal(res.values[lane],
+                                      ref.bfs_ref(g, s))
+    # duplicate source: the two lanes are bit-identical to each other
+    np.testing.assert_array_equal(res.values[0], res.values[2])
+    # padding lane: born finished, all-inf, zero everything
+    assert np.isinf(res.values[3]).all()
+    assert int(np.asarray(res.stats.rounds)[3]) == 0
+    assert int(res.done_round[3]) == 0
+    # shared rounds = the slowest lane; strictly beats sequential
+    lane_rounds = np.asarray(res.stats.rounds)
+    assert res.total_rounds == int(lane_rounds.max())
+    assert res.total_rounds < res.seq_rounds
+    assert int(np.asarray(res.stats.drops).sum()) == 0
+
+
+def test_batch_lanes_sssp_and_termination_rounds(g, pg):
+    """SSSP lanes: per-lane values/stats == solo, and done_round records
+    each lane's own termination round (== its solo round count)."""
+    cfg = small_cfg()
+    srcs = sources_of(g, 4, seed=2)
+    res = multi_source(pg, "sssp", srcs, cfg)
+    for lane, s in enumerate(srcs):
+        r = solo(pg, "sssp", s, cfg)
+        assert_lane_is_solo(res, lane, r)
+        assert int(res.done_round[lane]) == int(r.stats.rounds)
+    assert res.total_rounds == int(np.asarray(res.stats.rounds).max())
+
+
+def test_multi_source_rejects_non_point_queries(pg):
+    with pytest.raises(ValueError, match="bfs/sssp"):
+        multi_source(pg, "pagerank", [0], small_cfg())
+
+
+# --------------------------------------------------------------------------
+# The acceptance anchor: B=64 strictly beats 64 sequential runs.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", [
+    "xla", pytest.param("pallas", marks=pytest.mark.pallas)])
+def test_b64_batch_beats_sequential(g, pg, backend):
+    cfg = small_cfg(backend=backend)
+    srcs = sources_of(g, 64, seed=3)
+    res = multi_source(pg, "bfs", srcs, cfg)
+    # bit-identical per-query results (one solo run per unique source)
+    ref_runs = {int(s): solo(pg, "bfs", s, cfg)
+                for s in sorted(set(int(s) for s in srcs))}
+    for lane, s in enumerate(srcs):
+        assert_lane_is_solo(res, lane, ref_runs[int(s)])
+    # strictly fewer shared rounds than 64 sequential runs
+    lane_rounds = np.asarray(res.stats.rounds)
+    assert res.total_rounds == int(lane_rounds.max())
+    assert res.seq_rounds == int(lane_rounds.sum())
+    assert res.total_rounds < res.seq_rounds
+    assert int(np.asarray(res.stats.drops).sum()) == 0
+
+
+# --------------------------------------------------------------------------
+# Batch clock: B=1 degenerates to the solo accumulators.
+# --------------------------------------------------------------------------
+
+def test_b1_batch_clock_equals_solo_accumulators(g, pg):
+    cfg = small_cfg()
+    s = int(sources_of(g, 1, seed=4)[0])
+    res = multi_source(pg, "bfs", [s], cfg)
+    r = solo(pg, "bfs", s, cfg)
+    # one lane, no sharing: the batch makespan IS the solo cycle count
+    assert res.batch_cycles == float(r.stats.cycles)
+    assert res.batch_energy_pj == pytest.approx(float(r.stats.energy_pj),
+                                                rel=1e-6)
+    assert float(res.done_cycle[0]) == res.batch_cycles
+
+
+def test_batch_clock_sublinear_and_monotone(g, pg):
+    """The shared makespan grows with B but strictly sublinearly: B lanes
+    pay the per-round overhead once, so the batch beats B solo makespans
+    laid end to end."""
+    cfg = small_cfg()
+    srcs = sources_of(g, 8, seed=5)
+    res1 = multi_source(pg, "bfs", srcs[:1], cfg)
+    res8 = multi_source(pg, "bfs", srcs, cfg)
+    solo_sum = sum(float(solo(pg, "bfs", s, cfg).stats.cycles)
+                   for s in srcs)
+    assert res8.batch_cycles > res1.batch_cycles  # more work, later finish
+    assert res8.batch_cycles < solo_sum           # but amortized
+    # per-lane completion stamps are bounded by the makespan
+    assert (np.asarray(res8.done_cycle) <= res8.batch_cycles + 1e-3).all()
+
+
+# --------------------------------------------------------------------------
+# Front end: static and continuous policies.
+# --------------------------------------------------------------------------
+
+def check_records(g, pg, cfg, app, rep, srcs):
+    """Every streamed record matches its solo run (rounds/edges/values)
+    and carries monotone enqueue <= admit <= complete timestamps."""
+    assert len(rep.records) == len(srcs)
+    assert rep.drops == 0
+    rf = ref.bfs_ref if app == "bfs" else ref.sssp_ref
+    for rec in rep.records:
+        r = solo(pg, app, rec.source, cfg)
+        assert rec.rounds == int(r.stats.rounds)
+        assert rec.edges == int(r.stats.edges_scanned)
+        np.testing.assert_array_equal(rec.values, r.values)
+        np.testing.assert_array_equal(rec.values, rf(g, rec.source))
+        assert rec.enqueue_cycle <= rec.admit_cycle <= rec.complete_cycle
+        assert rec.latency >= rec.wait >= 0
+
+
+@pytest.mark.parametrize("arrival,gap", [("burst", 0.0),
+                                         ("uniform", 3000.0)])
+def test_frontend_static(g, pg, arrival, gap):
+    cfg = small_cfg()
+    srcs = sources_of(g, 9, seed=6)
+    fe = Frontend(pg, app="bfs", cfg=cfg, width=4)
+    rep = fe.serve(srcs, arrival=arrival, gap=gap, seed=0)
+    check_records(g, pg, cfg, "bfs", rep, srcs)
+    assert rep.batches >= int(np.ceil(len(srcs) / 4))
+    if arrival == "burst":  # queries pile up -> batching amortizes rounds
+        assert rep.total_rounds < rep.seq_rounds
+    else:  # paced wider than the batch makespan: solo batches, no worse
+        assert rep.total_rounds <= rep.seq_rounds
+    assert rep.qps > 0 and rep.gteps > 0 and rep.j_per_query > 0
+    # the row is json-ready: plain python scalars only
+    row = rep.row()
+    assert row["queries"] == len(srcs) and row["drops"] == 0
+    assert row["lat_p50"] <= row["lat_p95"] <= row["lat_max"]
+
+
+def test_frontend_continuous(g, pg):
+    """Continuous batching: lane recycling streams every record with
+    solo-identical rounds/edges/values — a freed lane's reuse never
+    contaminates its successor query."""
+    cfg = small_cfg()
+    srcs = sources_of(g, 9, seed=7)
+    fe = Frontend(pg, app="bfs", cfg=cfg, width=4, policy="continuous")
+    rep = fe.serve(srcs, arrival="poisson", gap=2000.0, seed=0)
+    check_records(g, pg, cfg, "bfs", rep, srcs)
+    assert rep.total_rounds < rep.seq_rounds
+    assert rep.policy == "continuous"
+
+
+def test_frontend_validation(pg):
+    with pytest.raises(ValueError, match="bfs/sssp"):
+        Frontend(pg, app="wcc")
+    with pytest.raises(ValueError, match="policy"):
+        Frontend(pg, policy="adaptive")
+    with pytest.raises(ValueError, match="width"):
+        Frontend(pg, width=0)
+    with pytest.raises(ValueError, match="LocalComm"):
+        Frontend(pg, policy="continuous", mesh=object())
+
+
+def test_arrival_cycles():
+    np.testing.assert_array_equal(arrival_cycles(4, "burst"), np.zeros(4))
+    np.testing.assert_array_equal(arrival_cycles(3, "uniform", gap=10.0),
+                                  [0.0, 10.0, 20.0])
+    p1 = arrival_cycles(5, "poisson", gap=100.0, seed=1)
+    p2 = arrival_cycles(5, "poisson", gap=100.0, seed=1)
+    np.testing.assert_array_equal(p1, p2)  # deterministic at a seed
+    assert (np.diff(p1) > 0).all()
+    with pytest.raises(ValueError, match="gap"):
+        arrival_cycles(3, "uniform")
+    with pytest.raises(ValueError, match="unknown"):
+        arrival_cycles(3, "weibull", gap=1.0)
+
+
+# --------------------------------------------------------------------------
+# Row plumbing: the serving columns are additive.
+# --------------------------------------------------------------------------
+
+def test_stats_row_serving_keys_additive(g, pg):
+    from benchmarks.common import stats_row
+    res = solo(pg, "bfs", int(sources_of(g, 1)[0]), small_cfg())
+    plain = stats_row(res.stats)
+    assert "queries" not in plain and "qps" not in plain
+    served = stats_row(res.stats, queries=12, qps=345.6)
+    assert served["queries"] == 12 and served["qps"] == 345.6
+    # the pre-serving keys are untouched — baseline rows stay byte-stable
+    assert {k: v for k, v in served.items()
+            if k not in ("queries", "qps")} == plain
+
+
+# --------------------------------------------------------------------------
+# shard_map SPMD lanes (subprocess, as in tests/test_spmd.py).
+# --------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import algorithms as alg
+    from repro.core.engine import EngineConfig
+    from repro.core.graph import CSRGraph, rmat_edges
+    from repro.serve import Frontend, multi_source
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("x",))
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    g = CSRGraph.from_edges(n, src, dst, val)
+    pg = alg.prepare(g, T=8)
+    cfg = EngineConfig(f_pop=8, r_pop=8, u_pop=16, max_t2=8,
+                       cap_route_range=8, cap_route_update=32,
+                       cap_rangeq=128, cap_updq=4096, max_rounds=5000)
+    deg = np.asarray(g.ptr[1:] - g.ptr[:-1])
+    srcs = np.random.default_rng(0).choice(np.flatnonzero(deg > 0), size=5)
+    srcs = np.concatenate([srcs, [-1]])  # padding lane rides along too
+
+    # SPMD batch == LocalComm batch, bit for bit (values + every Stats
+    # field + the batch clocks)
+    r_spmd = multi_source(pg, "bfs", srcs, cfg, mesh=mesh)
+    r_local = multi_source(pg, "bfs", srcs, cfg)
+    np.testing.assert_array_equal(r_spmd.values, r_local.values)
+    for name in r_spmd.stats._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_spmd.stats, name)),
+            np.asarray(getattr(r_local.stats, name)), err_msg=name)
+    assert r_spmd.total_rounds == r_local.total_rounds
+    assert float(r_spmd.batch_cycles) == float(r_local.batch_cycles)
+    assert float(r_spmd.batch_energy_pj) == float(r_local.batch_energy_pj)
+    np.testing.assert_array_equal(r_spmd.done_round, r_local.done_round)
+
+    # == solo runs, per lane (the lane contract holds under shard_map)
+    for lane, s in enumerate(srcs[:-1]):
+        rs = alg.bfs(pg, int(s), cfg, mesh=mesh)
+        np.testing.assert_array_equal(r_spmd.values[lane], rs.values)
+        assert int(np.asarray(r_spmd.stats.rounds)[lane]) == \\
+            int(rs.stats.rounds)
+    assert np.isinf(r_spmd.values[-1]).all()
+
+    # the static front end runs on the SPMD path too
+    fe = Frontend(pg, app="bfs", cfg=cfg, width=4, mesh=mesh)
+    rep = fe.serve(srcs[:-1])
+    assert len(rep.records) == 5 and rep.drops == 0
+    assert rep.total_rounds < rep.seq_rounds
+    print("SERVE-SPMD-OK")
+""")
+
+
+@pytest.mark.slow
+def test_spmd_lanes_match_local_and_solo():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SERVE-SPMD-OK" in out.stdout
