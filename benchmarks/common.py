@@ -60,13 +60,18 @@ def stats_row(stats, queries=None, qps=None) -> dict:
 
     Serving rows (fig12 / repro.serve) pass ``queries`` and ``qps``; the
     keys are ADDITIVE — omitted when not given, so the pre-serving
-    baseline rows (BENCH_PR3.baseline.json) stay byte-stable."""
+    baseline rows (BENCH_PR3.baseline.json) stay byte-stable.  The
+    ``launches`` counter (pallas_call dispatches, PR7) follows the same
+    pattern: emitted only when nonzero, so every xla row — the whole
+    pre-pallas baseline — stays byte-stable."""
     out = {}
     if queries is not None:
         out["queries"] = int(queries)
     if qps is not None:
         out["qps"] = round(float(qps), 1)
     for k in stats._fields:
+        if k == "launches" and not np.asarray(stats.launches).any():
+            continue  # 0 on xla: omit, keeping pre-pallas rows byte-stable
         v = np.asarray(getattr(stats, k))
         if v.ndim == 0:
             out[k] = float(v) if np.issubdtype(v.dtype, np.floating) \

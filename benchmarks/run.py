@@ -17,8 +17,8 @@ def main() -> None:
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
                             fig8_noc, fig10_energy, fig11_backend,
-                            fig12_serving, lm_micro, roofline, taskgraphs,
-                            work_efficiency)
+                            fig12_serving, kern_micro, lm_micro, roofline,
+                            taskgraphs, work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -40,11 +40,17 @@ def main() -> None:
              ("ideal", "mesh", "torus", "ruche", "hier"),
         policies=("traffic",) if fast else ("traffic", "static")))
     print("# fig11: engine execution backend, xla vs pallas tile-grid "
-          "kernels (interpret)")
+          "kernels (interpret; fused single-launch legs vs nofuse)")
     _emit(fig11_backend.run(
         scale=8 if fast else 10, T=8 if fast else 16,
         apps=("bfs", "spmv") if fast else fig11_backend.APPS,
+        nocs=("ideal", "hier") if fast else fig11_backend.NOCS,
         repeat=1 if fast else 2))
+    print("# kern-micro: pallas launch-overhead pricing (fused leg = 1 "
+          "launch)")
+    _emit(kern_micro.run(n_chain=8 if fast else 32,
+                         size=256 if fast else 1024,
+                         repeat=1 if fast else 3))
     print("# fig12: query serving — batch width x arrival pattern "
           "(queries/sec, joules/query)")
     _emit(fig12_serving.run(

@@ -3,8 +3,11 @@ code cannot rot unnoticed.
 
 Runs the fig5 optimization ladder, the task-graph workloads, the fig8
 hierarchy column (mesh vs torus vs multi-die hier + die-local placement),
-the fig11 backend bench (xla vs pallas tile-grid kernels — the CI
-proof that ``backend="pallas"`` rows exist and match), and the fig12
+the fig11 backend bench (xla vs pallas-nofuse vs fused pallas, ideal +
+the multi-die hier corner — the CI proof that ``backend="pallas"`` rows
+exist, match bit-for-bit and run one launch per channel leg, the
+``launches_per_round`` column), the kern_micro launch-overhead rows
+(measured launch counts; fused variants must report exactly 1), and the fig12
 serving bench (batched query lanes: static + continuous batching +
 a pallas-backend batch, queries/sec rows) at T=4 / scale=6,
 asserts the no-drop invariant and the reference checks on every row, and
@@ -39,7 +42,7 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
 ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend", "placement",
-           "ndies", "arrival")
+           "ndies", "arrival", "kernel")
 
 
 def row_key(row: dict) -> tuple:
@@ -88,7 +91,7 @@ def main() -> int:
 
     t0 = time.time()
     from benchmarks import (fig5_ablation, fig8_noc, fig11_backend,
-                            fig12_serving, taskgraphs)
+                            fig12_serving, kern_micro, taskgraphs)
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
@@ -101,7 +104,15 @@ def main() -> int:
     fig11 = fig11_backend.run(scale=args.scale, T=args.tiles,
                               apps=("bfs", "spmv", "triangles"),
                               timing=False, repeat=0)
+    # the multi-die corner of the backend bench: fused single-launch legs
+    # must stay bit-identical to xla under the hier NoC too
+    fig11 += fig11_backend.run(scale=args.scale, T=args.tiles,
+                               apps=("bfs",), nocs=("hier",),
+                               timing=False, repeat=0)
     rows += fig11
+    # launch-overhead microbench: deterministic (measured) launch counts
+    # only — the fused variants must report exactly 1 pallas_call
+    rows += kern_micro.run(n_chain=8, size=256, timing=False)
     # the fig12 serving rows: batched query lanes (static + continuous +
     # one pallas-backend batch), queries/sec gated like everything else
     fig12 = fig12_serving.run(scale=args.scale, T=args.tiles, queries=12,
@@ -118,7 +129,11 @@ def main() -> int:
     bad += [r for r in rows if r.get("drops", 0) != 0]
     bad += [r for r in rows if r.get("ok") is False]
     bad += [r for r in rows  # missing perf columns must fail, not pass
-            if r.get("cycles", 0) <= 0 or r.get("energy_pj", 0) <= 0]
+            if r.get("bench") != "kern_micro"  # no engine => no perf cols
+            and (r.get("cycles", 0) <= 0 or r.get("energy_pj", 0) <= 0)]
+    if not any(r.get("bench") == "fig11" and r.get("backend") == "pallas"
+               and r.get("launches_per_round", 0) > 0 for r in rows):
+        bad.append("fig11 pallas rows must carry launches_per_round > 0")
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     if args.fig11_out != "none":

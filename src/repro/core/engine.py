@@ -78,6 +78,7 @@ graph, the rounds and the fabric, freezing each lane with
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -91,7 +92,8 @@ from repro.core.program import (BFS, PAGERANK, SPMV, SSSP,  # noqa: F401
                                 as_program)
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
-from repro.kernels.engine import queue_push_pop
+from repro.kernels.engine import (fifo_turn, fused_leg_call, queue_append,
+                                  queue_push_pop, tally)
 from repro.noc import make_network
 from repro.perf import (PerfParams, link_cost_vectors, round_energy_pj,
                         tile_compute_cycles)
@@ -134,6 +136,19 @@ class EngineConfig:
     # kernel bodies; set False only on a real TPU (DESIGN.md caveats).
     backend: str = "xla"     # "xla" | "pallas"
     pallas_interpret: bool = True
+    # ``pallas_fuse=True`` (the default) runs each channel leg whose
+    # channels all resolved to "pallas" as ONE pallas_call — the whole
+    # per-tile stage (frontier pop, FIFO turn, spill re-queue, remainder
+    # re-push, scan, fold) becomes the kernel body with VMEM-resident
+    # intermediates (repro.kernels.engine.fused_leg_call).  False keeps
+    # the legacy one-kernel-per-building-block dispatch (4+ launches per
+    # leg plus XLA glue); both are bit-identical to "xla".
+    # ``pallas_pad_lanes`` pads every fused-leg operand block to the TPU's
+    # (8, 128) sublane x lane f32 tile (sliced back inside the body) so
+    # the non-interpret path lands aligned blocks; value-neutral.
+    # ``Stats.launches`` counts the pallas_call dispatches per round.
+    pallas_fuse: bool = True
+    pallas_pad_lanes: bool = False
     # --- NoC backend (repro.noc) ---
     noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche" | "hier"
     noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
@@ -203,6 +218,13 @@ class Stats(NamedTuple):
     cycles: jax.Array               # () modeled cycles, per-round critical
                                     # path summed over rounds
     energy_pj: jax.Array            # () modeled energy, linear in counters
+    # --- launch accounting (repro.kernels.engine.launches) ---
+    launches: jax.Array             # () pallas_call dispatches, summed over
+                                    # rounds (0 on the xla backend; counted
+                                    # at trace time, identical across comm
+                                    # backends — intentionally NOT part of
+                                    # the cross-backend equivalence
+                                    # contract)
 
     # Legacy scalar views: the classic program's two channels.
     @property
@@ -233,7 +255,7 @@ class Stats(NamedTuple):
                      jnp.zeros((num_links,), jnp.int32), z,
                      jnp.zeros((max_hops + 1,), jnp.int32),
                      jnp.zeros((max_die_crossings + 1,), jnp.int32),
-                     zf, zf)
+                     zf, zf, z)
 
 
 def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
@@ -380,9 +402,37 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     chans = prog.channels
     K = len(chans)
     backends = tuple(ch.resolve_backend(cfg) for ch in chans)
-    # per-leg contexts; the frontier source is the head of channel 0's leg
-    ctxs = tuple(ctx._replace(backend=b) for b in backends)
-    src_ctx = ctxs[0]
+    # Leg fusion (pallas_fuse): legs are indexed 0 (stage_first: channel
+    # 0's source + ingest), 1..K-1 (make_mid(i): channel i-1's handler +
+    # channel i's ingest) and K (stage_last: channel K-1's handler).  A
+    # leg runs as ONE pallas_call iff every channel it spans resolved to
+    # "pallas" — a per-channel "xla" pin de-fuses just the legs it touches.
+    fuse = cfg.pallas_fuse
+    leg_fused = ((fuse and backends[0] == "pallas",)
+                 + tuple(fuse and backends[i - 1] == "pallas"
+                         and backends[i] == "pallas"
+                         for i in range(1, K))
+                 + (fuse and backends[K - 1] == "pallas",))
+
+    def leg_ctx(chan_i, leg_i):
+        """The Ctx a building block of channel ``chan_i`` sees inside leg
+        ``leg_i`` — fused legs route the blocks to the pure kernel bodies
+        (no nested pallas_call)."""
+        return ctx._replace(backend=backends[chan_i],
+                            fused=leg_fused[leg_i])
+
+    def wrap_leg(stage, leg_i):
+        """Fused legs: the whole per-tile stage becomes one pallas_call
+        body (intermediates VMEM-resident), via fused_leg_call."""
+        if not leg_fused[leg_i]:
+            return stage
+
+        def fused_stage(me, *args):
+            return fused_leg_call(stage, me, *args,
+                                  interpret=cfg.pallas_interpret,
+                                  pad_lanes=cfg.pallas_pad_lanes)
+        return fused_stage
+
     caps = tuple(ch.route_cap(cfg) for ch in chans)
     pops = tuple(ch.pop_budget(cfg) for ch in chans)
     qcaps = tuple(ch.qcap(cfg) for ch in chans)
@@ -391,7 +441,19 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     pp = cfg.perf
     t_hop, e_hop = link_cost_vectors(pp, net)
 
-    def ingest(i, st, rows, valid, pop_i):
+    def requeue(st, i, sp, spv, cx):
+        """Spill re-queue into channel i's local queue.  Inside a fused leg
+        this is the in-kernel :func:`queue_append` body (bit-identical to
+        ``queue_push``) — the XLA glue the single launch absorbs."""
+        q = st.queues[i]
+        if cx.fused:
+            qdata, qcount, d = queue_append(q.data, q.count, sp, spv)
+            q = Queue(qdata, qcount)
+        else:
+            q, d = queue_push(q, sp, spv)
+        return _set_queue(st, i, q), d
+
+    def ingest(i, st, rows, valid, pop_i, cx):
         """Feed fresh rows into channel i and produce its network messages.
 
         Queued channels (real task queues) push fresh tasks, pop up to the
@@ -403,35 +465,43 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         ``npop`` entries dequeued and ``npush`` entries enqueued (fresh
         tasks + re-pushed split remainders) this round.
 
-        On the pallas backend the push+pop pair runs as ONE fused
-        :func:`repro.kernels.engine.queue_push_pop` kernel turn (spill-only
-        channels fuse with an empty fresh batch); the split-remainder
-        re-push stays a plain tail scatter on both backends.
+        On the pallas backend the push+pop pair is one fused FIFO turn
+        (spill-only channels turn with an empty fresh batch): the
+        standalone :func:`repro.kernels.engine.queue_push_pop` kernel when
+        the leg is unfused, or the in-kernel :func:`fifo_turn` body when
+        the whole leg is already a single pallas_call (``cx.fused``), in
+        which case the split-remainder re-push is absorbed in-kernel too
+        via :func:`queue_append`.
         """
         q = st.queues[i]
         if chans[i].queued:
-            if backends[i] == "pallas":
-                taken, tvalid, qdata, qcount, d0 = queue_push_pop(
-                    q.data, q.count, rows, valid, pop_i, pops[i],
-                    interpret=cfg.pallas_interpret)
+            if cx.backend == "pallas":
+                turn = fifo_turn if cx.fused else functools.partial(
+                    queue_push_pop, interpret=cfg.pallas_interpret)
+                taken, tvalid, qdata, qcount, d0 = turn(
+                    q.data, q.count, rows, valid, pop_i, pops[i])
                 q = Queue(qdata, qcount)
             else:
                 q, d0 = queue_push(q, rows, valid)
                 taken, tvalid, q = queue_take_front(q, pop_i, pops[i])
-            msgs, mvalid, rem, remv = chans[i].transform(ctxs[i], taken,
-                                                         tvalid)
-            q, d1 = queue_push(q, rem, remv)
+            msgs, mvalid, rem, remv = chans[i].transform(cx, taken, tvalid)
+            if cx.fused:
+                qdata, qcount, d1 = queue_append(q.data, q.count, rem, remv)
+                q = Queue(qdata, qcount)
+            else:
+                q, d1 = queue_push(q, rem, remv)
             drops = d0 + d1
             npop = tvalid.sum(dtype=jnp.int32)
             npush = (valid.sum(dtype=jnp.int32)
                      + remv.sum(dtype=jnp.int32))
         else:
-            if backends[i] == "pallas":
+            if cx.backend == "pallas":
                 none = jnp.zeros((1,), bool)
                 pad = jnp.zeros((1, q.data.shape[1]), jnp.int32)
-                replay, rvalid, qdata, qcount, _ = queue_push_pop(
-                    q.data, q.count, pad, none, pop_i, pops[i],
-                    interpret=cfg.pallas_interpret)
+                turn = fifo_turn if cx.fused else functools.partial(
+                    queue_push_pop, interpret=cfg.pallas_interpret)
+                replay, rvalid, qdata, qcount, _ = turn(
+                    q.data, q.count, pad, none, pop_i, pops[i])
                 q = Queue(qdata, qcount)
             else:
                 replay, rvalid, q = queue_take_front(q, pop_i, pops[i])
@@ -442,31 +512,40 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             npush = jnp.zeros((), jnp.int32)
         return _set_queue(st, i, q), msgs, mvalid, drops, npop, npush
 
+    cx_first = leg_ctx(0, 0)
+
     def stage_first(me, sh, st):
         f_pop, dyn_pops = _budgets(cfg, prog, qcaps, pops, st, plimit)
-        st, rows, valid = prog.source(src_ctx, me, sh, st, f_pop)
+        st, rows, valid = prog.source(cx_first, me, sh, st, f_pop)
         st, msgs, mvalid, drops, npop, npush = ingest(
-            0, st, rows, valid, dyn_pops[0])
+            0, st, rows, valid, dyn_pops[0], cx_first)
         return st, msgs, mvalid, drops, dyn_pops, npop, npush
 
+    stage_first = wrap_leg(stage_first, 0)
+
     def make_mid(i):
+        cx_h = leg_ctx(i - 1, i)  # channel i-1's handler under this leg
+        cx_q = leg_ctx(i, i)      # channel i's ingest under this leg
+
         def stage(me, sh, st, recv, rv, sp, spv, dyn_pops):
-            q, d0 = queue_push(st.queues[i - 1], sp, spv)
-            st = _set_queue(st, i - 1, q)
+            st, d0 = requeue(st, i - 1, sp, spv, cx_h)
             st, rows, valid, work = chans[i - 1].handler(
-                ctxs[i - 1], me, sh, st, recv, rv)
+                cx_h, me, sh, st, recv, rv)
             st, msgs, mvalid, d1, npop, npush = ingest(
-                i, st, rows, valid, dyn_pops[i])
+                i, st, rows, valid, dyn_pops[i], cx_q)
             nspill = spv.sum(dtype=jnp.int32)
             return st, msgs, mvalid, d0 + d1, work, npop, npush, nspill
-        return stage
+        return wrap_leg(stage, i)
+
+    cx_last = leg_ctx(K - 1, K)
 
     def stage_last(me, sh, st, recv, rv, sp, spv):
-        q, d0 = queue_push(st.queues[K - 1], sp, spv)
-        st = _set_queue(st, K - 1, q)
-        st, _, _, work = chans[K - 1].handler(ctxs[K - 1], me, sh, st, recv,
+        st, d0 = requeue(st, K - 1, sp, spv, cx_last)
+        st, _, _, work = chans[K - 1].handler(cx_last, me, sh, st, recv,
                                               rv)
         return st, d0, work, spv.sum(dtype=jnp.int32)
+
+    stage_last = wrap_leg(stage_last, K)
 
     def kahan_add(total, comp, inc):
         """Compensated f32 accumulation: (new_total, new_comp)."""
@@ -475,38 +554,45 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         return t, (t - total) - y
 
     def rnd(st: EngineState, stats: Stats, kcomp):
-        st, msgs, mvalid, drops, dyn_pops, n_pop, n_push = comm.run(
-            stage_first, shard, st)
-        routed = net.route(comm, msgs, mvalid, caps[0], owners[0])
-        link_round = routed.link_flits
-        hop_round = routed.hop_hist
-        die_round = routed.die_hist
-        sents = [routed.sent]
-        spillv = [routed.spill_valid]
-        edges = jnp.zeros_like(drops)
-        applied = jnp.zeros_like(drops)
-        n_replay = jnp.zeros_like(drops)
-        for i in range(1, K):
-            st, msgs, mvalid, d, work, npop, npush, nspill = comm.run(
-                make_mid(i), shard, st, routed.recv, routed.recv_valid,
-                routed.spill, routed.spill_valid, dyn_pops)
-            drops = drops + d
-            n_pop = n_pop + npop
-            n_push = n_push + npush
-            n_replay = n_replay + nspill
-            if chans[i - 1].work == "edges":
-                edges = edges + work
-            elif chans[i - 1].work == "updates":
-                applied = applied + work
-            routed = net.route(comm, msgs, mvalid, caps[i], owners[i])
-            link_round = link_round + routed.link_flits
-            hop_round = hop_round + routed.hop_hist
-            die_round = die_round + routed.die_hist
-            sents.append(routed.sent)
-            spillv.append(routed.spill_valid)
-        st, d, work, nspill = comm.run(stage_last, shard, st, routed.recv,
-                                       routed.recv_valid, routed.spill,
-                                       routed.spill_valid)
+        # The round body is traced exactly once per compile, so the
+        # pallas_call dispatches recorded while tracing the stages below
+        # ARE this round's launch count (repro.kernels.engine.launches) —
+        # a Python int folded into Stats.launches, identical under
+        # LocalComm/vmap, shard_map and the serving-lane vmap.
+        with tally() as launch_tally:
+            st, msgs, mvalid, drops, dyn_pops, n_pop, n_push = comm.run(
+                stage_first, shard, st)
+            routed = net.route(comm, msgs, mvalid, caps[0], owners[0])
+            link_round = routed.link_flits
+            hop_round = routed.hop_hist
+            die_round = routed.die_hist
+            sents = [routed.sent]
+            spillv = [routed.spill_valid]
+            edges = jnp.zeros_like(drops)
+            applied = jnp.zeros_like(drops)
+            n_replay = jnp.zeros_like(drops)
+            for i in range(1, K):
+                st, msgs, mvalid, d, work, npop, npush, nspill = comm.run(
+                    make_mid(i), shard, st, routed.recv, routed.recv_valid,
+                    routed.spill, routed.spill_valid, dyn_pops)
+                drops = drops + d
+                n_pop = n_pop + npop
+                n_push = n_push + npush
+                n_replay = n_replay + nspill
+                if chans[i - 1].work == "edges":
+                    edges = edges + work
+                elif chans[i - 1].work == "updates":
+                    applied = applied + work
+                routed = net.route(comm, msgs, mvalid, caps[i], owners[i])
+                link_round = link_round + routed.link_flits
+                hop_round = hop_round + routed.hop_hist
+                die_round = die_round + routed.die_hist
+                sents.append(routed.sent)
+                spillv.append(routed.spill_valid)
+            st, d, work, nspill = comm.run(stage_last, shard, st,
+                                           routed.recv, routed.recv_valid,
+                                           routed.spill,
+                                           routed.spill_valid)
         drops = drops + d
         n_replay = n_replay + nspill
         if chans[K - 1].work == "edges":
@@ -572,6 +658,7 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             die_crossings=stats.die_crossings + glob(die_round),
             cycles=cycles_acc,
             energy_pj=energy_acc,
+            launches=stats.launches + jnp.int32(launch_tally.n),
         )
         return st, stats, (c_cyc, c_en), glob(pending)
 

@@ -50,7 +50,8 @@ import numpy as np
 
 from repro.core.queues import f2i, i2f
 from repro.kernels.engine import (edge_scan_gather, fold_scatter,
-                                  frontier_pop)
+                                  frontier_pop, frontier_take, scatter_body,
+                                  segment_gather)
 
 INF = jnp.float32(np.finfo(np.float32).max)
 
@@ -63,6 +64,12 @@ class Ctx(NamedTuple):
     :attr:`TaskSpec.backend` hint — "xla" runs the building blocks inline,
     "pallas" dispatches them to the :mod:`repro.kernels.engine` tile-grid
     kernels (bit-identical by contract; see DESIGN.md "Pallas backend").
+
+    ``fused`` means the *whole leg* is already executing inside one Pallas
+    launch (``engine.make_round`` wrapped the stage in
+    :func:`repro.kernels.engine.fused_leg_call`): the building blocks then
+    call the pure kernel *bodies* inline — same ops, same bits — instead
+    of nesting a ``pallas_call`` per block.
     """
 
     cfg: object   # EngineConfig (static dataclass)
@@ -70,6 +77,7 @@ class Ctx(NamedTuple):
     e_chunk: int
     v_chunk: int
     backend: str = "xla"
+    fused: bool = False
 
 
 def _interpret(ctx: Ctx) -> bool:
@@ -330,9 +338,13 @@ def frontier_source(payload: Callable) -> Callable:
 
     def source(ctx: Ctx, me, sh, st, budget):
         if ctx.backend == "pallas":
-            vidx, vvalid, frontier = frontier_pop(
-                st.frontier, budget, ctx.cfg.f_pop,
-                interpret=_interpret(ctx))
+            if ctx.fused:  # already inside the leg's single pallas_call
+                vidx, vvalid, frontier = frontier_take(
+                    st.frontier, budget, ctx.cfg.f_pop)
+            else:
+                vidx, vvalid, frontier = frontier_pop(
+                    st.frontier, budget, ctx.cfg.f_pop,
+                    interpret=_interpret(ctx))
         else:
             vidx, vvalid, frontier = take_first_k(st.frontier, budget,
                                                   ctx.cfg.f_pop)
@@ -375,9 +387,14 @@ def edge_scan(emit_rows: Callable) -> Callable:
     def handler(ctx: Ctx, me, sh, st, recv, rv):
         r_start, r_stop = recv[:, 0], recv[:, 1]
         if ctx.backend == "pallas":
-            nb, w, jvalid = edge_scan_gather(
-                sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
-                ctx.cfg.max_t2, interpret=_interpret(ctx))
+            if ctx.fused:  # already inside the leg's single pallas_call
+                nb, w, jvalid = segment_gather(
+                    sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
+                    ctx.cfg.max_t2)
+            else:
+                nb, w, jvalid = edge_scan_gather(
+                    sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
+                    ctx.cfg.max_t2, interpret=_interpret(ctx))
         else:
             length = jnp.where(rv, r_stop - r_start, 0)
             local0 = jnp.where(rv, r_start % ctx.e_chunk, 0)
@@ -403,6 +420,8 @@ def scatter_fold(ctx: Ctx, target: jax.Array, lidx: jax.Array,
     :func:`repro.kernels.engine.fold_scatter` kernel on the pallas backend;
     both paths are bit-identical (owner-local, atomic-free writes)."""
     if ctx.backend == "pallas":
+        if ctx.fused:  # already inside the leg's single pallas_call
+            return scatter_body(target, lidx, vals, valid, op)
         return fold_scatter(target, lidx, vals, valid, op=op,
                             interpret=_interpret(ctx))
     neutral = INF if op == "min" else jnp.float32(0.0)

@@ -1,7 +1,19 @@
 """Pallas execution backend for the Dalorex engine round (one grid program
-= one tile; see kernel.py and DESIGN.md "Pallas backend")."""
-from repro.kernels.engine.kernel import (edge_scan_gather, fold_scatter,
-                                         frontier_pop, queue_push_pop)
+= one tile; see kernel.py and DESIGN.md "Pallas backend").
+
+Standalone kernels (``frontier_pop``/``queue_push_pop``/``edge_scan_gather``
+/``fold_scatter``), their pure value->value bodies (``frontier_take``/
+``fifo_turn``/``queue_append``/``segment_gather``/``scatter_body``), the
+single-launch fused-leg harness (``fused_leg_call``), and trace-time launch
+accounting (``launches.tally``/``launches.record``)."""
+from repro.kernels.engine.kernel import (edge_scan_gather, fifo_turn,
+                                         fold_scatter, frontier_pop,
+                                         frontier_take, fused_leg_call,
+                                         queue_append, queue_push_pop,
+                                         scatter_body, segment_gather)
+from repro.kernels.engine.launches import record, tally
 
 __all__ = ["edge_scan_gather", "fold_scatter", "frontier_pop",
-           "queue_push_pop"]
+           "queue_push_pop", "frontier_take", "fifo_turn", "queue_append",
+           "segment_gather", "scatter_body", "fused_leg_call", "record",
+           "tally"]

@@ -2,39 +2,55 @@
 
 One grid program = one Dalorex tile.  The engine's per-round hot path —
 the queue->scan->route->fold legs of ``engine.make_round`` — is re-expressed
-here as four Pallas kernels whose *block* is the tile's VMEM-resident
+here as Pallas kernels whose *block* is the tile's VMEM-resident
 vertex/edge shard.  Under ``LocalComm`` the engine vmaps per-tile stages,
 and Pallas's batching rule turns the vmapped tile axis into a leading grid
 dimension — literally one grid program per tile; under ``AxisComm``
 (shard_map SPMD) each device *is* one tile and the kernels run gridless on
 its shard.  The query-lane axis of ``repro.serve`` (the round vmapped over
 ``(B,)`` concurrent traversals) rides the same batching rule as one more
-leading grid dimension — a ``(B, T)`` grid of programs, no kernel changes.  See DESIGN.md "Pallas backend" for the tile-grid mapping, the
-per-tile VMEM budget, and the TPU (non-interpret) caveats.
+leading grid dimension — a ``(B, T)`` grid of programs, no kernel changes.
+See DESIGN.md "Pallas backend" for the tile-grid mapping, the per-tile
+VMEM budget, and the TPU (non-interpret) caveats.
 
-The four kernels mirror the paper's per-tile pipeline (Section III):
+Two granularities share one set of *pure bodies* (:func:`frontier_take`,
+:func:`fifo_turn`, :func:`queue_append`, :func:`segment_gather`,
+:func:`scatter_body` — plain jnp value->value functions):
 
-* :func:`frontier_pop` — the fused T4 pop: take the first ``k`` set bits of
-  the frontier bitmap and clear them, compacting the popped vertex indices
-  with a cumsum-rank scatter (no sort) — the task-queue head of Listing 1.
-* :func:`queue_push_pop` — one fused circular-FIFO turn: append this
-  round's fresh tasks and pop the TSU budget off the front in a single
-  kernel, replacing the engine's ``queue_push`` + ``queue_take_front``
-  pair (two argsort compactions) with one scatter + one shift.
-* :func:`edge_scan_gather` — the T2 leg: segment gather over the popped
-  ``(start, stop)`` ranges out of the tile's edge shard.  The head flits of
-  the received messages index straight into local memory — the same
-  "the index IS the route" idiom as ``kernels/spmv``'s scalar-prefetched
-  block-ELL x-gather, applied to the ragged CSR segments.
-* :func:`fold_scatter` — the T3 leg: drain a delivered CQ buffer and
-  scatter-min / scatter-add it into the tile's owned slice of the value
-  array.  Atomic-free by construction: every write targets the tile's own
-  shard (the paper's ownership argument, Section III-A).
+* **Standalone kernels** — :func:`frontier_pop`, :func:`queue_push_pop`,
+  :func:`edge_scan_gather`, :func:`fold_scatter` wrap one body each in its
+  own ``pallas_call`` (PR4's four-launch leg, kept as the
+  ``pallas_fuse=False`` legacy path and for the kernel-twin tests).
+* **The fused leg** — :func:`fused_leg_call` runs a *whole* engine channel
+  leg (frontier-pop -> FIFO turn -> transform -> spill re-queue ->
+  split-remainder re-push -> segment-gather -> scatter-fold, whatever the
+  stage composes) as ONE ``pallas_call``: the per-tile stage function
+  itself becomes the kernel body, every intermediate lives in
+  VMEM-resident registers/scratch of that single launch, and the XLA glue
+  that used to run *between* kernels (the mid-round spill re-queue and the
+  split-remainder re-push) is absorbed into the same body via the pure
+  queue bodies.  ``Ctx.fused`` routes the building blocks of
+  ``core/program.py`` to the pure bodies so a fused leg never nests a
+  ``pallas_call``.  The fold stays the in-kernel ``.at[]`` scatter idiom
+  of ``kernels/scatter_update`` (owner-local, atomic-free) rather than the
+  one-hot matmul alternative — bit-identical to XLA in interpret mode; on
+  a real TPU a scatter-add drains in-order per row, so add folds may drift
+  by the last ulp vs XLA's unspecified reduction order (DESIGN.md).
+
+Every ``pallas_call`` dispatch is *counted*: the public wrappers call
+:func:`repro.kernels.engine.launches.record` at trace time, the engine
+brackets its round with :func:`..launches.tally`, and the per-round total
+surfaces as ``Stats.launches`` (fig11's ``launches_per_round`` column —
+one launch per leg fused, vs 4+ standalone launches plus XLA glue before).
 
 All kernels default to ``interpret=True`` so CPU CI executes the very same
 kernel bodies the TPU path compiles, and every kernel is **bit-identical**
 to its XLA twin in ``core/program.py`` / ``core/queues.py`` (the backend
-equivalence contract ``tests/test_backend_pallas.py`` enforces).
+equivalence contract ``tests/test_backend_pallas.py`` +
+``tests/test_fused_leg.py`` enforce).  ``pad_lanes=True`` additionally
+pads every fused-leg operand block out to the TPU's (8, 128)
+sublane x lane f32 tile (sliced back to logical shape inside the body), so
+the same harness lands aligned blocks when ``pallas_interpret=False``.
 """
 from __future__ import annotations
 
@@ -42,7 +58,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels.engine.launches import record
 
 # float32 max as a python float (pallas kernels cannot capture traced
 # consts); must equal core.program.INF so the fold's neutral element is the
@@ -50,15 +69,16 @@ from jax.experimental import pallas as pl
 _INF = 3.4028234663852886e38
 
 
-# --------------------------------------------------------------------------
-# T4: fused frontier pop (take_first_k as one kernel).
-# --------------------------------------------------------------------------
+# ==========================================================================
+# Pure bodies: value -> value, shared by the standalone kernels and the
+# fused leg (Ctx.fused routes core/program.py's building blocks here).
+# ==========================================================================
 
-def _frontier_pop_kernel(k_ref, mask_ref, idx_ref, valid_ref, rem_ref):
-    mask = mask_ref[...]
-    k = k_ref[0]
+def frontier_take(mask: jax.Array, k: jax.Array, k_max: int):
+    """Body of :func:`frontier_pop`: first ``min(k, popcount)`` set bits,
+    FIFO by position, compacted with a cumsum-rank scatter (no sort).
+    Returns (idx (k_max,) i32, valid (k_max,) bool, cleared_mask)."""
     n = mask.shape[0]
-    k_max = idx_ref.shape[0]
     ar = jnp.arange(n, dtype=jnp.int32)
     mi = mask.astype(jnp.int32)
     rank = jnp.cumsum(mi) - mi            # 0-based rank among set bits
@@ -67,13 +87,240 @@ def _frontier_pop_kernel(k_ref, mask_ref, idx_ref, valid_ref, rem_ref):
     # slot k_max is the trash slot for the rest.
     slot = jnp.where(take, rank, jnp.int32(k_max))
     idx = jnp.zeros((k_max + 1,), jnp.int32).at[slot].set(ar)
-    idx_ref[...] = idx[:k_max]
     n_take = take.sum(dtype=jnp.int32)
-    valid_ref[...] = jnp.arange(k_max, dtype=jnp.int32) < n_take
-    rem_ref[...] = mask & ~take
+    valid = jnp.arange(k_max, dtype=jnp.int32) < n_take
+    return idx[:k_max], valid, mask & ~take
+
+
+def fifo_turn(data: jax.Array, count: jax.Array, rows: jax.Array,
+              valid: jax.Array, n: jax.Array, max_n: int):
+    """Body of :func:`queue_push_pop`: one circular-FIFO turn — append the
+    valid fresh rows at the tail (cumsum slot claim, overflow -> drops),
+    then pop ``min(n, count')`` off the front with a single shift.
+
+    Returns (taken (min(max_n, cap), w), taken_valid, new_data (cap, w),
+    new_count () i32, drops () i32).  The taken buffer is clamped to the
+    capacity exactly like the XLA ``queue_take_front`` slice — which makes
+    the zero-capacity degenerate (a cap-0 spill-only channel) an explicit
+    early-out here: nothing can be stored, so the pop is the empty (0, w)
+    buffer and every offered row is a counted drop, reproducing XLA's
+    empty-slice behavior instead of relying on it.
+    """
+    cap, w = data.shape
+    if cap == 0:
+        drops = valid.sum(dtype=jnp.int32)
+        return (jnp.zeros((0, w), jnp.int32), jnp.zeros((0,), bool),
+                data, count + 0, drops)
+    data2, count2, drops = queue_append(data, count, rows, valid)
+    eff = min(max_n, cap)
+    n_pop = jnp.minimum(n, count2)
+    taken = data2[:eff]
+    tvalid = jnp.arange(eff, dtype=jnp.int32) < n_pop
+    src = jnp.minimum(jnp.arange(cap, dtype=jnp.int32) + n_pop, cap - 1)
+    return taken, tvalid, data2[src], count2 - n_pop, drops
+
+
+def queue_append(data: jax.Array, count: jax.Array, rows: jax.Array,
+                 valid: jax.Array):
+    """Push-only FIFO tail append — the in-kernel twin of
+    ``core.queues.queue_push`` (same cumsum slot claim, same trash-slot
+    scatter, bit-identical), used by the fused leg to absorb the mid-round
+    spill re-queue and the split-remainder re-push that previously ran as
+    XLA glue between kernels.  Returns (new_data, new_count, drops)."""
+    cap, w = data.shape
+    mi = valid.astype(jnp.int32)
+    offs = count + jnp.cumsum(mi) - mi
+    ok = valid & (offs < cap)
+    slot = jnp.where(ok, offs, jnp.int32(cap))  # cap = trash slot
+    ext = jnp.concatenate([data, jnp.zeros((1, w), jnp.int32)], axis=0)
+    data2 = ext.at[slot].set(rows)[:cap]
+    n_push = ok.sum(dtype=jnp.int32)
+    return data2, count + n_push, mi.sum() - n_push
+
+
+def segment_gather(edge_dst: jax.Array, edge_val: jax.Array,
+                   start: jax.Array, stop: jax.Array, rv: jax.Array,
+                   max_t2: int):
+    """Body of :func:`edge_scan_gather`: the T2 ragged segment gather out
+    of the tile's edge shard.  Returns (nb, w, jvalid), each (R, max_t2)."""
+    e_chunk = edge_dst.shape[0]
+    length = jnp.where(rv, stop - start, 0)
+    local0 = jnp.where(rv, start % e_chunk, 0)
+    j = jnp.arange(max_t2, dtype=jnp.int32)[None, :]
+    eidx = local0[:, None] + j                    # (R, MAX_T2)
+    jvalid = rv[:, None] & (j < length[:, None])
+    eidx_c = jnp.minimum(eidx, e_chunk - 1)
+    nb = edge_dst[eidx_c]
+    return nb, edge_val[eidx_c], jvalid & (nb >= 0)
+
+
+def scatter_body(target: jax.Array, lidx: jax.Array, vals: jax.Array,
+                 valid: jax.Array, op: str):
+    """Body of :func:`fold_scatter`: the T3 owner-local scatter-min /
+    scatter-add (``lidx`` maps invalid rows to the ``v_chunk`` trash slot).
+    The ``kernels/scatter_update`` in-kernel scatter idiom — atomic-free
+    because every write targets the tile's own shard."""
+    v_chunk = target.shape[0]
+    neutral = _INF if op == "min" else 0.0
+    ext = jnp.concatenate(
+        [target, jnp.full((1,), neutral, jnp.float32)])
+    masked = jnp.where(valid, vals, jnp.float32(neutral))
+    if op == "min":
+        ext = ext.at[lidx].min(masked)
+    else:
+        ext = ext.at[lidx].add(masked)
+    return ext[:v_chunk]
+
+
+# ==========================================================================
+# The fused leg: one pallas_call per engine channel leg.
+# ==========================================================================
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _lane_pad(shape: tuple) -> tuple:
+    """The (8, 128) f32 tile rule: last dim to a lane multiple, second-last
+    (when present) to a sublane multiple.  Scalars ride as (1,) unpadded
+    (they belong in SMEM on real hardware, not a lane tile)."""
+    s = list(shape)
+    s[-1] = _ceil_to(s[-1], 128)
+    if len(s) >= 2:
+        s[-2] = _ceil_to(s[-2], 8)
+    return tuple(s)
+
+
+def fused_leg_call(fn, *operands, interpret: bool = True,
+                   pad_lanes: bool = False):
+    """Run the per-tile stage ``fn(*operands)`` as ONE Pallas launch.
+
+    ``fn`` is a pure pytree -> pytree function (an engine channel leg:
+    state in, state + messages out).  The harness flattens the operand
+    pytrees into kernel refs, makes the *stage itself* the kernel body —
+    so every intermediate of the chained frontier-pop -> FIFO turn ->
+    spill re-queue -> remainder re-push -> segment-gather -> scatter-fold
+    stays resident in the launch (VMEM on a TPU) — and unflattens the
+    outputs, shaped via ``jax.eval_shape``.  Leaf plumbing:
+
+    * () scalars ride as (1,) refs and are restored inside the body;
+    * zero-size leaves (e.g. a cap-0 queue's data) bypass the launch —
+      materialized as zeros on each side, since a 0-element ref is
+      meaningless;
+    * ``pad_lanes=True`` pads every non-scalar block to the (8, 128)
+      sublane x lane f32 tile on the way in (zeros) and slices each ref
+      back to its logical shape inside the body, so TPU-aligned blocks
+      and the interpret path compute the identical values.
+
+    Under ``LocalComm`` the engine vmaps this call and the batching rule
+    turns the tile axis into the Pallas grid (one grid program per tile);
+    a serving lane axis batches the same way.  Counts as one launch with
+    :mod:`repro.kernels.engine.launches`.
+    """
+    flat_in, in_tree = jax.tree.flatten(operands)
+    flat_in = [jnp.asarray(x) for x in flat_in]
+    out_avals = jax.eval_shape(fn, *operands)
+    flat_out, out_tree = jax.tree.flatten(out_avals)
+    in_specs = [(tuple(x.shape), x.dtype) for x in flat_in]
+    out_specs = [(tuple(a.shape), a.dtype) for a in flat_out]
+
+    def live(shape):
+        return int(np.prod(shape, dtype=np.int64)) > 0 or shape == ()
+
+    def to_call(x):
+        shape = tuple(x.shape)
+        if shape == ():
+            return x.reshape(1)
+        tgt = _lane_pad(shape) if pad_lanes else shape
+        if tgt != shape:
+            x = jnp.pad(x, [(0, t - s) for s, t in zip(shape, tgt)])
+        return x
+
+    def from_ref(ref, shape):
+        v = ref[...]
+        if shape == ():
+            return v[0]
+        return v[tuple(slice(0, s) for s in shape)]
+
+    n_in = sum(live(s) for s, _ in in_specs)
+
+    def kernel(*refs):
+        it = iter(refs[:n_in])
+        vals = []
+        for shape, dtype in in_specs:
+            if not live(shape):
+                vals.append(jnp.zeros(shape, dtype))
+            else:
+                vals.append(from_ref(next(it), shape))
+        outs = jax.tree.leaves(fn(*jax.tree.unflatten(in_tree, vals)))
+        ot = iter(refs[n_in:])
+        for o, (shape, _) in zip(outs, out_specs):
+            if not live(shape):
+                continue
+            ref = next(ot)
+            if shape == ():
+                ref[...] = o.reshape(1)
+            else:
+                tgt = _lane_pad(shape) if pad_lanes else shape
+                if tgt != shape:
+                    o = jnp.pad(o, [(0, t - s) for s, t in zip(shape, tgt)])
+                ref[...] = o
+
+    call_ins = [to_call(x) for x, (s, _) in zip(flat_in, in_specs)
+                if live(s)]
+    out_shape = tuple(
+        jax.ShapeDtypeStruct(
+            (1,) if s == () else (_lane_pad(s) if pad_lanes else s), d)
+        for s, d in out_specs if live(s))
+    record()
+    raw = pl.pallas_call(kernel, out_shape=out_shape,
+                         interpret=interpret)(*call_ins)
+    if not isinstance(raw, (tuple, list)):
+        raw = (raw,)
+    it = iter(raw)
+    restored = []
+    for shape, dtype in out_specs:
+        if not live(shape):
+            restored.append(jnp.zeros(shape, dtype))
+        elif shape == ():
+            restored.append(next(it)[0])
+        else:
+            restored.append(
+                next(it)[tuple(slice(0, s) for s in shape)])
+    return jax.tree.unflatten(out_tree, restored)
+
+
+# ==========================================================================
+# Standalone kernels (PR4's four-launch leg; the pallas_fuse=False path and
+# the kernel-twin test surface).  Each wraps one pure body in a pallas_call;
+# the plain public wrappers record the launch, then dispatch to an inner
+# jitted impl (a jit cache hit would skip a record placed inside).
+# ==========================================================================
+
+# --------------------------------------------------------------------------
+# T4: fused frontier pop (take_first_k as one kernel).
+# --------------------------------------------------------------------------
+
+def _frontier_pop_kernel(k_ref, mask_ref, idx_ref, valid_ref, rem_ref):
+    idx, valid, rem = frontier_take(mask_ref[...], k_ref[0],
+                                    idx_ref.shape[0])
+    idx_ref[...] = idx
+    valid_ref[...] = valid
+    rem_ref[...] = rem
 
 
 @functools.partial(jax.jit, static_argnames=("k_max", "interpret"))
+def _frontier_pop(mask, k, k_max, interpret):
+    n = mask.shape[0]
+    return pl.pallas_call(
+        _frontier_pop_kernel,
+        out_shape=(jax.ShapeDtypeStruct((k_max,), jnp.int32),
+                   jax.ShapeDtypeStruct((k_max,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)),
+        interpret=interpret,
+    )(jnp.asarray(k, jnp.int32).reshape(1), mask)
+
+
 def frontier_pop(mask: jax.Array, k: jax.Array, k_max: int,
                  interpret: bool = True):
     """Pop the first ``min(k, popcount)`` set bits of the tile's frontier
@@ -85,14 +332,8 @@ def frontier_pop(mask: jax.Array, k: jax.Array, k_max: int,
     Invalid slots of ``idx`` hold 0 (the XLA twin holds unpopped positions
     there); both are don't-cares masked by ``valid`` everywhere downstream.
     """
-    n = mask.shape[0]
-    return pl.pallas_call(
-        _frontier_pop_kernel,
-        out_shape=(jax.ShapeDtypeStruct((k_max,), jnp.int32),
-                   jax.ShapeDtypeStruct((k_max,), jnp.bool_),
-                   jax.ShapeDtypeStruct((n,), jnp.bool_)),
-        interpret=interpret,
-    )(jnp.asarray(k, jnp.int32).reshape(1), mask)
+    record()
+    return _frontier_pop(mask, k, k_max, interpret)
 
 
 # --------------------------------------------------------------------------
@@ -102,32 +343,30 @@ def frontier_pop(mask: jax.Array, k: jax.Array, k_max: int,
 def _queue_push_pop_kernel(n_ref, data_ref, count_ref, rows_ref, pvalid_ref,
                            taken_ref, tvalid_ref, ndata_ref, ncount_ref,
                            drops_ref):
-    data = data_ref[...]
-    count = count_ref[0]
-    rows = rows_ref[...]
-    pvalid = pvalid_ref[...]
-    cap, w = data.shape
-    max_n = taken_ref.shape[0]
-    # --- push: append valid fresh rows at the tail (cumsum slot claim) ---
-    mi = pvalid.astype(jnp.int32)
-    offs = count + jnp.cumsum(mi) - mi
-    ok = pvalid & (offs < cap)
-    slot = jnp.where(ok, offs, jnp.int32(cap))  # cap = trash slot
-    ext = jnp.concatenate([data, jnp.zeros((1, w), jnp.int32)], axis=0)
-    data2 = ext.at[slot].set(rows)[:cap]
-    n_push = ok.sum(dtype=jnp.int32)
-    count2 = count + n_push
-    drops_ref[0] = mi.sum() - n_push
-    # --- pop: the front min(n, count2) rows, then shift the queue left ---
-    n_pop = jnp.minimum(n_ref[0], count2)
-    taken_ref[...] = data2[:max_n]
-    tvalid_ref[...] = jnp.arange(max_n, dtype=jnp.int32) < n_pop
-    src = jnp.minimum(jnp.arange(cap, dtype=jnp.int32) + n_pop, cap - 1)
-    ndata_ref[...] = data2[src]
-    ncount_ref[0] = count2 - n_pop
+    taken, tvalid, ndata, ncount, drops = fifo_turn(
+        data_ref[...], count_ref[0], rows_ref[...], pvalid_ref[...],
+        n_ref[0], taken_ref.shape[0])
+    taken_ref[...] = taken
+    tvalid_ref[...] = tvalid
+    ndata_ref[...] = ndata
+    ncount_ref[0] = ncount
+    drops_ref[0] = drops
 
 
 @functools.partial(jax.jit, static_argnames=("max_n", "interpret"))
+def _queue_push_pop(data, count, rows, valid, n, max_n, interpret):
+    return pl.pallas_call(
+        _queue_push_pop_kernel,
+        out_shape=(jax.ShapeDtypeStruct((max_n, data.shape[1]), jnp.int32),
+                   jax.ShapeDtypeStruct((max_n,), jnp.bool_),
+                   jax.ShapeDtypeStruct(data.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(jnp.asarray(n, jnp.int32).reshape(1), data,
+      jnp.asarray(count, jnp.int32).reshape(1), rows, valid)
+
+
 def queue_push_pop(data: jax.Array, count: jax.Array, rows: jax.Array,
                    valid: jax.Array, n: jax.Array, max_n: int,
                    interpret: bool = True):
@@ -140,19 +379,20 @@ def queue_push_pop(data: jax.Array, count: jax.Array, rows: jax.Array,
     new_count () i32, drops () i32).  Live rows (< new_count) and the taken
     buffer are bit-identical to the two-call XLA path; rows at or beyond
     the live count are unobservable garbage in both backends.
+
+    The zero-capacity degenerate (a cap-0 spill-only channel) is an
+    explicit early-out — no kernel is launched, the pop is the empty
+    ``(0, w)`` buffer, every offered row counts as a drop — matching the
+    shapes XLA's empty ``queue_take_front`` slice produces instead of
+    relying on them.
     """
     cap = data.shape[0]
+    if cap == 0:
+        return fifo_turn(data, count, rows, valid, n, max_n)
     assert max_n <= cap, f"pop budget bound {max_n} > queue capacity {cap}"
-    taken, tvalid, ndata, ncount, drops = pl.pallas_call(
-        _queue_push_pop_kernel,
-        out_shape=(jax.ShapeDtypeStruct((max_n, data.shape[1]), jnp.int32),
-                   jax.ShapeDtypeStruct((max_n,), jnp.bool_),
-                   jax.ShapeDtypeStruct(data.shape, jnp.int32),
-                   jax.ShapeDtypeStruct((1,), jnp.int32),
-                   jax.ShapeDtypeStruct((1,), jnp.int32)),
-        interpret=interpret,
-    )(jnp.asarray(n, jnp.int32).reshape(1), data,
-      jnp.asarray(count, jnp.int32).reshape(1), rows, valid)
+    record()
+    taken, tvalid, ndata, ncount, drops = _queue_push_pop(
+        data, count, rows, valid, n, max_n, interpret)
     return taken, tvalid, ndata, ncount[0], drops[0]
 
 
@@ -161,24 +401,28 @@ def queue_push_pop(data: jax.Array, count: jax.Array, rows: jax.Array,
 # --------------------------------------------------------------------------
 
 def _edge_scan_kernel(edge_dst_ref, edge_val_ref, start_ref, stop_ref,
-                      rv_ref, nb_ref, w_ref, jvalid_ref, *, e_chunk):
-    start = start_ref[...]
-    stop = stop_ref[...]
-    rv = rv_ref[...]
-    max_t2 = nb_ref.shape[1]
-    length = jnp.where(rv, stop - start, 0)
-    local0 = jnp.where(rv, start % e_chunk, 0)
-    j = jnp.arange(max_t2, dtype=jnp.int32)[None, :]
-    eidx = local0[:, None] + j                    # (R, MAX_T2)
-    jvalid = rv[:, None] & (j < length[:, None])
-    eidx_c = jnp.minimum(eidx, e_chunk - 1)
-    nb = edge_dst_ref[...][eidx_c]
+                      rv_ref, nb_ref, w_ref, jvalid_ref):
+    nb, w, jvalid = segment_gather(
+        edge_dst_ref[...], edge_val_ref[...], start_ref[...], stop_ref[...],
+        rv_ref[...], nb_ref.shape[1])
     nb_ref[...] = nb
-    w_ref[...] = edge_val_ref[...][eidx_c]
-    jvalid_ref[...] = jvalid & (nb >= 0)
+    w_ref[...] = w
+    jvalid_ref[...] = jvalid
 
 
 @functools.partial(jax.jit, static_argnames=("max_t2", "interpret"))
+def _edge_scan_gather(edge_dst, edge_val, start, stop, rv, max_t2,
+                      interpret):
+    r = start.shape[0]
+    return pl.pallas_call(
+        _edge_scan_kernel,
+        out_shape=(jax.ShapeDtypeStruct((r, max_t2), jnp.int32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.float32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.bool_)),
+        interpret=interpret,
+    )(edge_dst, edge_val, start, stop, rv)
+
+
 def edge_scan_gather(edge_dst: jax.Array, edge_val: jax.Array,
                      start: jax.Array, stop: jax.Array, rv: jax.Array,
                      max_t2: int, interpret: bool = True):
@@ -193,15 +437,9 @@ def edge_scan_gather(edge_dst: jax.Array, edge_val: jax.Array,
     jvalid (R, max_t2) bool), bit-identical to the inline XLA gather in
     :func:`repro.core.program.edge_scan`.
     """
-    e_chunk = edge_dst.shape[0]
-    r = start.shape[0]
-    return pl.pallas_call(
-        functools.partial(_edge_scan_kernel, e_chunk=e_chunk),
-        out_shape=(jax.ShapeDtypeStruct((r, max_t2), jnp.int32),
-                   jax.ShapeDtypeStruct((r, max_t2), jnp.float32),
-                   jax.ShapeDtypeStruct((r, max_t2), jnp.bool_)),
-        interpret=interpret,
-    )(edge_dst, edge_val, start, stop, rv)
+    record()
+    return _edge_scan_gather(edge_dst, edge_val, start, stop, rv, max_t2,
+                             interpret)
 
 
 # --------------------------------------------------------------------------
@@ -210,25 +448,19 @@ def edge_scan_gather(edge_dst: jax.Array, edge_val: jax.Array,
 
 def _fold_scatter_kernel(target_ref, lidx_ref, vals_ref, valid_ref, out_ref,
                          *, op):
-    target = target_ref[...]
-    lidx = lidx_ref[...]
-    vals = vals_ref[...]
-    valid = valid_ref[...]
-    v_chunk = target.shape[0]
-    neutral = _INF if op == "min" else 0.0
-    # lidx holds v_chunk (the trash slot) for invalid rows already; the
-    # extended buffer absorbs them without a branch.
-    ext = jnp.concatenate(
-        [target, jnp.full((1,), neutral, jnp.float32)])
-    masked = jnp.where(valid, vals, jnp.float32(neutral))
-    if op == "min":
-        ext = ext.at[lidx].min(masked)
-    else:
-        ext = ext.at[lidx].add(masked)
-    out_ref[...] = ext[:v_chunk]
+    out_ref[...] = scatter_body(target_ref[...], lidx_ref[...],
+                                vals_ref[...], valid_ref[...], op)
 
 
 @functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def _fold_scatter(target, lidx, vals, valid, op, interpret):
+    return pl.pallas_call(
+        functools.partial(_fold_scatter_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct(target.shape, jnp.float32),
+        interpret=interpret,
+    )(target, lidx, vals, valid)
+
+
 def fold_scatter(target: jax.Array, lidx: jax.Array, vals: jax.Array,
                  valid: jax.Array, op: str = "min", interpret: bool = True):
     """The T3 fold: drain a delivered CQ buffer into the tile's owned
@@ -242,8 +474,5 @@ def fold_scatter(target: jax.Array, lidx: jax.Array, vals: jax.Array,
     :func:`repro.core.program.scatter_fold`.
     """
     assert op in ("min", "add"), op
-    return pl.pallas_call(
-        functools.partial(_fold_scatter_kernel, op=op),
-        out_shape=jax.ShapeDtypeStruct(target.shape, jnp.float32),
-        interpret=interpret,
-    )(target, lidx, vals, valid)
+    record()
+    return _fold_scatter(target, lidx, vals, valid, op, interpret)

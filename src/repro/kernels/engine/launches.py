@@ -1,0 +1,57 @@
+"""Trace-time Pallas launch accounting.
+
+A "launch" is one ``pl.pallas_call`` dispatch.  On real hardware each one
+costs a fixed kernel-launch / sync overhead on top of the tile work
+(``benchmarks/kern_micro.py`` measures it), so the engine wants to *count*
+them: ``Stats.launches`` reports how many kernel dispatches one round
+issues, and fig11 reports the fused-vs-unfused delta.
+
+The count is taken at **trace time**: the engine round is traced exactly
+once per compile (the whole traversal is one ``lax.while_loop``), so the
+number of ``pallas_call`` sites traced into the round body *is* the number
+of launches the hardware would issue per round — a Python integer, exact,
+and identical across LocalComm/vmap and shard_map executions of the same
+round.  Every public kernel wrapper in :mod:`repro.kernels.engine.kernel`
+calls :func:`record` from its (non-jitted) entry point; the engine brackets
+its round trace with :func:`tally`.
+
+Counts nest: a tally sees every launch recorded while it is the innermost
+open tally.  When no tally is open, :func:`record` is a no-op — standalone
+kernel calls (tests, microbenches) cost nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+class Tally:
+    """Mutable launch counter; ``.n`` is valid once its context exits."""
+
+    def __init__(self):
+        self.n = 0
+
+
+def record(n: int = 1) -> None:
+    """Note ``n`` kernel launches against the innermost open tally."""
+    for t in _stack():
+        t.n += n
+
+
+@contextlib.contextmanager
+def tally():
+    """Open a launch-count scope: ``with tally() as t: ...; t.n``."""
+    t = Tally()
+    _stack().append(t)
+    try:
+        yield t
+    finally:
+        _stack().pop()
