@@ -63,15 +63,19 @@ def stats_row(stats, queries=None, qps=None) -> dict:
     baseline rows (BENCH_PR3.baseline.json) stay byte-stable.  The
     ``launches`` counter (pallas_call dispatches, PR7) follows the same
     pattern: emitted only when nonzero, so every xla row — the whole
-    pre-pallas baseline — stays byte-stable."""
+    pre-pallas baseline — stays byte-stable; the per-space counters
+    (``hbm_windows`` / ``hbm_edges``, PR8) likewise appear only on runs
+    whose edge shard actually streamed from HBM."""
     out = {}
     if queries is not None:
         out["queries"] = int(queries)
     if qps is not None:
         out["qps"] = round(float(qps), 1)
     for k in stats._fields:
-        if k == "launches" and not np.asarray(stats.launches).any():
-            continue  # 0 on xla: omit, keeping pre-pallas rows byte-stable
+        if k in ("launches", "hbm_windows", "hbm_edges") \
+                and not np.asarray(getattr(stats, k)).any():
+            continue  # 0 when the feature is off: omit, keeping the
+            #           pre-feature baseline rows byte-stable
         v = np.asarray(getattr(stats, k))
         if v.ndim == 0:
             out[k] = float(v) if np.issubdtype(v.dtype, np.floating) \

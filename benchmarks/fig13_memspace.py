@@ -1,0 +1,193 @@
+"""Memory-space bench: VMEM-resident vs HBM-streamed edge shards.
+
+Beyond the paper's figures: PR8's memory-space abstraction (``repro.mem``,
+DESIGN.md "Memory spaces") lets the per-tile edge shard be *declared* in
+VMEM (word-random resident — the implicit assumption every earlier PR
+baked in) or in HBM (consumed through double-buffered segment-DMA windows
+driven by the prefetched head flits).  This bench runs the ladder per
+workload:
+
+* ``rung="vmem"`` — the resident baseline;
+* ``rung="hbm-w<window>"`` — the same graph streamed at each DMA window
+  size (the auto-sized default plus a max_t2-tight window).
+
+and proves/reports, per row:
+
+* **equivalence** (the ``ok`` column) — HBM rows must be bit-identical to
+  the vmem rung in values, rounds, msgs/spills and edges: the space
+  changes *where* the shard lives and what it costs, never what the
+  program computes.  A pallas-backend HBM row additionally pins backend
+  equivalence on the streamed path (bit-identical to the xla HBM row
+  including cycles/energy).
+* **per-space pricing** — modeled GTEPS and the pJ/edge split by space
+  (``pj_per_edge_sram`` / ``pj_per_edge_hbm``; the streamed words priced
+  at ``e_hbm``), plus ``dma_windows_round`` (DMA windows fetched per
+  round: 2 per delivered range message, the double buffer).
+* **the beyond-VMEM run** (``rung="hbm-beyond"``) — the acceptance
+  property: under a ``vmem_limit_bytes`` budget the all-VMEM layout
+  *rejects at config time* (``Program.validate``; asserted here), the
+  HBM layout runs the very same graph end to end, bit-identical in
+  values to the unconstrained vmem rung.
+
+Rows feed ``benchmarks/smoke.py`` (BENCH json + the standalone
+``BENCH_FIG13.json`` artifact); ``run.py`` runs the full ladder with a
+``--fast`` mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.program import as_program
+from repro.mem import resolve_window
+from benchmarks.common import (engine_cfg, perf_cols, pick_root, rmat_graph,
+                               stats_row)
+
+APPS = ("bfs", "sssp", "spmv", "kcore")
+
+
+def _runner(app, pg, pgs, root, x):
+    if app == "bfs":
+        return lambda cfg: alg.bfs(pg, root, cfg)
+    if app == "sssp":
+        return lambda cfg: alg.sssp(pg, root, cfg)
+    if app == "spmv":
+        return lambda cfg: alg.spmv(pg, x, cfg)
+    if app == "kcore":
+        return lambda cfg: alg.kcore(pgs, 2, cfg)
+    raise ValueError(app)
+
+
+def _reference(app, g, gs, root, x):
+    if app == "bfs":
+        return ref.bfs_ref(g, root)
+    if app == "sssp":
+        return ref.sssp_ref(g, root)
+    if app == "spmv":
+        return ref.spmv_ref(g, x)
+    if app == "kcore":
+        return ref.kcore_ref(gs, 2)
+    return None
+
+
+def _row(app, rung, space, window, res, cfg, T, ok):
+    s = stats_row(res.stats)
+    p = perf_cols(res.stats, cfg, T)
+    row = {
+        "bench": "fig13", "app": app, "rung": rung, "space": space,
+        "window": window, "backend": cfg.backend,
+        "rounds": s["rounds"], "msgs": s["msgs_sum"],
+        "spills": s["spills_sum"], "edges": s["edges_scanned"],
+        "drops": s["drops"], "cycles": p["cycles"], "gteps": p["gteps"],
+        "energy_pj": p["energy_pj"], "pj_per_edge": p["pj_per_edge"],
+        "ok": ok,
+    }
+    if space == "hbm":
+        row["hbm_windows"] = s["hbm_windows"]
+        row["hbm_edges"] = s["hbm_edges"]
+        row["dma_windows_round"] = round(
+            s["hbm_windows"] / max(s["rounds"], 1), 2)
+        row["pj_per_edge_sram"] = p.get("pj_per_edge_sram", 0.0)
+        row["pj_per_edge_hbm"] = p.get("pj_per_edge_hbm", 0.0)
+        row["hbm_frac"] = p.get("hbm_frac", 0.0)
+    return row
+
+
+def _same(res, base) -> bool:
+    """The space-equivalence contract: values + the space-independent
+    Stats (rounds/msgs/spills/edges) — cycles/energy differ by design
+    (that's the pricing split), the per-space counters are what differs."""
+    return (bool(np.array_equal(res.values, base.values))
+            and int(res.stats.rounds) == int(base.stats.rounds)
+            and int(res.stats.edges_scanned) == int(base.stats.edges_scanned)
+            and bool(np.array_equal(np.asarray(res.stats.msgs),
+                                    np.asarray(base.stats.msgs)))
+            and bool(np.array_equal(np.asarray(res.stats.spills),
+                                    np.asarray(base.stats.spills))))
+
+
+def _bit_identical(res, base) -> bool:
+    """Backend equivalence on the streamed path: values + cycles/energy
+    too (same space, same pricing — launches excluded by design)."""
+    return (_same(res, base)
+            and float(res.stats.cycles) == float(base.stats.cycles)
+            and float(res.stats.energy_pj) == float(base.stats.energy_pj)
+            and int(res.stats.hbm_windows) == int(base.stats.hbm_windows)
+            and int(res.stats.hbm_edges) == int(base.stats.hbm_edges))
+
+
+def run(scale: int = 8, T: int = 8, apps=APPS, pallas: bool = True) \
+        -> list[dict]:
+    g = rmat_graph(scale)
+    gs = alg.symmetrize(g)
+    pg = alg.prepare(g, T)
+    pgs = alg.prepare(gs, T)
+    root = pick_root(g)
+    x = np.linspace(0.5, 1.5, g.num_vertices).astype(np.float32)
+    base_cfg = engine_cfg(T=T)
+    auto_w = resolve_window(0, base_cfg.max_t2)
+    windows = (auto_w, base_cfg.max_t2)  # auto (pow2/granularity) + tight
+    rows = []
+    for app in apps:
+        fn = _runner(app, pg, pgs, root, x)
+        want = _reference(app, g, gs, root, x)
+        tol = 1e-4 if app == "spmv" else 0.0
+        vmem = fn(base_cfg)
+        ok = want is None or bool(np.allclose(vmem.values, want, rtol=tol,
+                                              atol=tol))
+        rows.append(_row(app, "vmem", "vmem", 0, vmem, base_cfg, T, ok))
+        hbm_first = None
+        for w in windows:
+            cfg = engine_cfg(T=T, edge_space="hbm", hbm_window=w)
+            res = fn(cfg)
+            ok = _same(res, vmem) and int(res.stats.hbm_windows) > 0
+            if hbm_first is None:
+                hbm_first = res
+            rows.append(_row(app, f"hbm-w{w}", "hbm", w, res, cfg, T, ok))
+        if pallas:
+            cfg = engine_cfg(T=T, edge_space="hbm", hbm_window=windows[0],
+                             backend="pallas")
+            res = fn(cfg)
+            rows.append(_row(app, f"hbm-w{windows[0]}-pallas", "hbm",
+                             windows[0], res, cfg, T,
+                             _bit_identical(res, hbm_first)))
+
+    # The beyond-VMEM acceptance run (bfs): a per-tile budget the resident
+    # edge shard cannot fit — the all-VMEM layout must REJECT at config
+    # time, and the HBM layout must run the same graph end to end,
+    # bit-identical to the unconstrained vmem rung.
+    prog = as_program(alg.BFS)
+    hbm_cfg = dataclasses.replace(base_cfg, edge_space="hbm",
+                                  hbm_window=base_cfg.max_t2)
+
+    def vmem_bytes(c):
+        return sum(b for _, sp, b in prog.tile_decls(c, T, pg.e_chunk,
+                                                     pg.v_chunk)
+                   if sp == "vmem")
+
+    # a budget squarely between the two footprints: the resident layout
+    # must not fit, the streamed one (queues + state + double buffer) must
+    limit = (vmem_bytes(hbm_cfg) + vmem_bytes(base_cfg)) // 2
+    tight = dataclasses.replace(base_cfg, vmem_limit_bytes=limit)
+    try:
+        alg.bfs(pg, root, tight)
+        raise RuntimeError(
+            "fig13: the over-budget all-VMEM config must raise at "
+            "Program.validate time, but it ran")
+    except ValueError:
+        pass  # the config-time rejection the memory budget promises
+    cfg = dataclasses.replace(hbm_cfg, vmem_limit_bytes=limit)
+    vmem_base = alg.bfs(pg, root, base_cfg)
+    res = alg.bfs(pg, root, cfg)
+    ok = _same(res, vmem_base) and int(res.stats.hbm_edges) > 0
+    rows.append(_row("bfs", "hbm-beyond", "hbm", base_cfg.max_t2, res, cfg,
+                     T, ok))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))

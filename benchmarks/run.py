@@ -17,8 +17,8 @@ def main() -> None:
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
                             fig8_noc, fig10_energy, fig11_backend,
-                            fig12_serving, kern_micro, lm_micro, roofline,
-                            taskgraphs, work_efficiency)
+                            fig12_serving, fig13_memspace, kern_micro,
+                            lm_micro, roofline, taskgraphs, work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -59,6 +59,12 @@ def main() -> None:
         widths=(1, 8) if fast else (1, 8, 64),
         arrivals=("burst",) if fast else ("burst", "poisson"),
         pallas_width=0 if fast else 8))
+    print("# fig13: memory-space ladder — VMEM-resident vs HBM-streamed "
+          "edge shards (double-buffered DMA windows, per-space pricing)")
+    _emit(fig13_memspace.run(
+        scale=8 if fast else 10, T=8 if fast else 16,
+        apps=("bfs", "spmv") if fast else fig13_memspace.APPS,
+        pallas=not fast))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

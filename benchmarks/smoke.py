@@ -9,13 +9,21 @@ exist, match bit-for-bit and run one launch per channel leg, the
 ``launches_per_round`` column), the kern_micro launch-overhead rows
 (measured launch counts; fused variants must report exactly 1), and the fig12
 serving bench (batched query lanes: static + continuous batching +
-a pallas-backend batch, queries/sec rows) at T=4 / scale=6,
+a pallas-backend batch, queries/sec rows), and the fig13 memory-space
+ladder (VMEM-resident vs HBM-streamed edge shards: bit-identical values,
+per-space pricing, the config-time rejection of an over-budget all-VMEM
+layout) at T=4 / scale=6,
 asserts the no-drop invariant and the reference checks on every row, and
 writes the
 rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
-fig11 / fig12 rows are additionally written standalone as
-``BENCH_FIG11.json`` / ``BENCH_FIG12.json`` (all uploaded as CI
-artifacts).
+fig11 / fig12 / fig13 rows are additionally written standalone as
+``BENCH_FIG11.json`` / ``BENCH_FIG12.json`` / ``BENCH_FIG13.json`` (all
+uploaded as CI artifacts).
+
+The per-space Stats columns (``hbm_windows`` / ``hbm_edges``) follow the
+additive-keys convention: they may appear ONLY on ``space == "hbm"``
+rows, so every pre-memspace baseline row stays byte-stable — asserted
+here, not just promised.
 
 If the committed baseline (``benchmarks/BENCH_PR3.baseline.json``) exists,
 every row is matched against it by its identity columns and the run FAILS
@@ -42,7 +50,7 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
 ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend", "placement",
-           "ndies", "arrival", "kernel")
+           "ndies", "arrival", "kernel", "space")
 
 
 def row_key(row: dict) -> tuple:
@@ -82,6 +90,9 @@ def main() -> int:
     ap.add_argument("--fig12-out", default="BENCH_FIG12.json",
                     help="standalone copy of the fig12 serving rows; "
                          "'none' to skip")
+    ap.add_argument("--fig13-out", default="BENCH_FIG13.json",
+                    help="standalone copy of the fig13 memory-space rows; "
+                         "'none' to skip")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline json to diff rounds against; 'none' "
                          "to skip")
@@ -91,7 +102,8 @@ def main() -> int:
 
     t0 = time.time()
     from benchmarks import (fig5_ablation, fig8_noc, fig11_backend,
-                            fig12_serving, kern_micro, taskgraphs)
+                            fig12_serving, fig13_memspace, kern_micro,
+                            taskgraphs)
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
@@ -119,6 +131,12 @@ def main() -> int:
                               widths=(1, 4), arrivals=("burst", "poisson"),
                               gap=2000.0, continuous=True, pallas_width=3)
     rows += fig12
+    # the fig13 memory-space ladder: VMEM-resident vs HBM-streamed edge
+    # shards (includes the internal assertion that an over-budget all-VMEM
+    # config REJECTS at Program.validate time while hbm runs it)
+    fig13 = fig13_memspace.run(scale=args.scale, T=args.tiles,
+                               apps=("bfs", "spmv"))
+    rows += fig13
 
     bad = []
     if not any(r.get("backend") == "pallas" for r in rows):
@@ -134,6 +152,17 @@ def main() -> int:
     if not any(r.get("bench") == "fig11" and r.get("backend") == "pallas"
                and r.get("launches_per_round", 0) > 0 for r in rows):
         bad.append("fig11 pallas rows must carry launches_per_round > 0")
+    if not any(r.get("bench") == "fig13" and r.get("space") == "hbm"
+               and r.get("hbm_windows", 0) > 0 and r.get("ok") is True
+               for r in rows):
+        bad.append("fig13 must emit an ok space=hbm row with "
+                   "hbm_windows > 0")
+    # additive-keys stability: the per-space counters may appear ONLY on
+    # hbm rows — a leak onto any other row would perturb the committed
+    # pre-memspace baseline rows byte-for-byte
+    bad += [r for r in rows
+            if r.get("space", "vmem") != "hbm"
+            and ("hbm_windows" in r or "hbm_edges" in r)]
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     if args.fig11_out != "none":
@@ -142,6 +171,9 @@ def main() -> int:
     if args.fig12_out != "none":
         with open(args.fig12_out, "w") as f:
             json.dump(fig12, f, indent=1)
+    if args.fig13_out != "none":
+        with open(args.fig13_out, "w") as f:
+            json.dump(fig13, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
     if bad:
         print(f"FAILED rows: {bad}")

@@ -49,6 +49,12 @@ def main():
     ap.add_argument("--placement", default=None,
                     choices=("low_order", "high_order",
                              "low_order_dielocal", "high_order_dielocal"))
+    ap.add_argument("--edge-space", choices=("vmem", "hbm"), default=None,
+                    help="memory space of the per-tile edge shard "
+                         "(repro.mem): hbm streams it through "
+                         "double-buffered segment DMA, bit-identical "
+                         "values (triangles stays on its pinned vmem "
+                         "shard)")
     ap.add_argument("--queries", type=int, default=0,
                     help="also serve N batched multi-source BFS/SSSP "
                          "queries (the repro.serve query lanes) and print "
@@ -70,9 +76,14 @@ def main():
         (wl.placement if wl else "low_order")
     dies = ndies if placement.endswith("_dielocal") else None
     ef = wl.edge_factor if wl else 10
+    edge_space = args.edge_space if args.edge_space is not None else \
+        (wl.edge_space if wl else "vmem")
+    hbm_window = wl.hbm_window if wl else 0
     EngineConfig = functools.partial(_EngineConfig, backend=backend,
                                      noc=noc, ndies_y=ndies[0],
-                                     ndies_x=ndies[1])
+                                     ndies_x=ndies[1],
+                                     edge_space=edge_space,
+                                     hbm_window=hbm_window)
 
     n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=1)
     g = CSRGraph.from_edges(n, src, dst, val)
@@ -198,7 +209,10 @@ def main():
               f"{int(res.values.sum()):10d}  {'OK' if ok else 'FAIL'}")
         assert ok and int(s.drops) == 0
     pgt = alg.prepare_triangles(gs, tiles)
-    res = alg.triangles(pgt, EngineConfig())
+    # triangles pins its edge shard to vmem (the closing fold
+    # binary-searches the resident adjacency) — honor the pin here
+    # instead of asking resolve_edge_space for the impossible.
+    res = alg.triangles(pgt, EngineConfig(edge_space="vmem"))
     ok = (res.values == ref.triangles_ref(gs, key=pgt.place)).all()
     s = res.stats
     print(f"{'triangles':10s} {int(s.rounds):7d} "

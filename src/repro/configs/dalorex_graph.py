@@ -26,6 +26,12 @@ class GraphWorkload:
     noc: str = "ideal"
     ndies: tuple = (1, 1)
     placement: str = "low_order"
+    # memory space of the tile's edge shard (repro.mem): "vmem" keeps the
+    # shard word-random resident; "hbm" streams it through double-buffered
+    # segment-DMA windows of ``hbm_window`` elements (0 = auto-size to the
+    # next pow2 >= max_t2) — bit-identical values, per-space pricing
+    edge_space: str = "vmem"
+    hbm_window: int = 0
 
 
 PRESETS = {
@@ -45,6 +51,17 @@ PRESETS = {
     "rmat-hier": GraphWorkload("rmat-hier", scale=12, tiles=64,
                                noc="hier", ndies=(2, 2),
                                placement="low_order_dielocal"),
+    # HBM-resident edge shards (DESIGN.md "Memory spaces"): the per-tile
+    # edge segments stream through double-buffered segment DMA instead of
+    # assuming the shard fits the tile's VMEM — the beyond-VMEM scaling
+    # path (triangles pins its shard to VMEM, so the apps here are the
+    # streaming-compatible five + kcore)
+    "rmat-small-hbm": GraphWorkload("rmat-small-hbm", scale=10,
+                                    edge_space="hbm"),
+    # the strong-scaling shape: a shard too big for a paper-era tile SRAM,
+    # end to end out of HBM
+    "rmat-large-hbm": GraphWorkload("rmat-large-hbm", scale=16, tiles=64,
+                                    edge_space="hbm", hbm_window=128),
 }
 
 

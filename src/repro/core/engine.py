@@ -89,11 +89,12 @@ from repro.core.comm import AxisComm, LocalComm
 from repro.core.graph import PartitionedGraph
 from repro.core.program import (BFS, PAGERANK, SPMV, SSSP,  # noqa: F401
                                 WCC, AlgSpec, Ctx, INF, Program, TaskSpec,
-                                as_program)
+                                as_program, resolve_edge_space)
 from repro.core.queues import (Queue, f2i, i2f, queue_make, queue_push,
                                queue_take_front)
 from repro.kernels.engine import (fifo_turn, fused_leg_call, queue_append,
                                   queue_push_pop, tally)
+from repro.mem import resolve_window
 from repro.noc import make_network
 from repro.perf import (PerfParams, link_cost_vectors, round_energy_pj,
                         tile_compute_cycles)
@@ -149,6 +150,20 @@ class EngineConfig:
     # ``Stats.launches`` counts the pallas_call dispatches per round.
     pallas_fuse: bool = True
     pallas_pad_lanes: bool = False
+    # --- memory spaces (repro.mem) ---
+    # ``edge_space`` declares where the tile's edge shard lives: "vmem"
+    # (word-random resident, the default) or "hbm" (the shard streams
+    # through double-buffered segment-DMA windows of ``hbm_window``
+    # elements; 0 auto-sizes to the next pow2 >= max_t2).  Programs may
+    # pin their own shard space (e.g. triangles pins "vmem"); see
+    # program.resolve_edge_space.  ``vmem_limit_bytes`` overrides the
+    # registry's per-tile VMEM capacity for Program.validate's
+    # config-time footprint check (0 = the registry default) — the knob
+    # that models a smaller tile, and the error that replaced the old
+    # implicit "everything fits in VMEM" assumption.
+    edge_space: str = "vmem"
+    hbm_window: int = 0
+    vmem_limit_bytes: int = 0
     # --- NoC backend (repro.noc) ---
     noc: str = "ideal"       # "ideal" | "mesh" | "torus" | "ruche" | "hier"
     noc_rows: int = 0        # grid rows; 0 = near-square factorization of T
@@ -225,6 +240,17 @@ class Stats(NamedTuple):
                                     # backends — intentionally NOT part of
                                     # the cross-backend equivalence
                                     # contract)
+    # --- per-space traffic (repro.mem; 0 unless the edge shard resolved
+    # to "hbm" — stats_row omits the columns when zero, the same additive
+    # convention as ``launches``, so pre-memspace baseline rows stay
+    # byte-stable.  NOT part of the vmem-vs-hbm space-equivalence
+    # contract, by design: they are what *differs* between spaces) ---
+    hbm_windows: jax.Array          # () DMA windows fetched (2 per
+                                    # delivered range message: the double
+                                    # buffer)
+    hbm_edges: jax.Array            # () edge words streamed from HBM
+                                    # (windows * window size), priced at
+                                    # t_hbm / e_hbm
 
     # Legacy scalar views: the classic program's two channels.
     @property
@@ -255,7 +281,7 @@ class Stats(NamedTuple):
                      jnp.zeros((num_links,), jnp.int32), z,
                      jnp.zeros((max_hops + 1,), jnp.int32),
                      jnp.zeros((max_die_crossings + 1,), jnp.int32),
-                     zf, zf, z)
+                     zf, zf, z, z, z)
 
 
 def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
@@ -398,7 +424,14 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     the NoC, and the perf model are backend-agnostic — they only ever see
     the legs' (bit-identical) outputs.
     """
-    ctx = Ctx(cfg, comm.size, e_chunk, v_chunk)
+    # Memory space of the edge shard (repro.mem): "hbm" switches the T2
+    # building blocks to the double-buffered segment-DMA stream and turns
+    # on per-space traffic accounting below.
+    edge_space = resolve_edge_space(prog, cfg)
+    window = resolve_window(cfg.hbm_window, cfg.max_t2) \
+        if edge_space == "hbm" else 0
+    ctx = Ctx(cfg, comm.size, e_chunk, v_chunk,
+              edge_space=edge_space, hbm_window=window)
     chans = prog.channels
     K = len(chans)
     backends = tuple(ch.resolve_backend(cfg) for ch in chans)
@@ -571,7 +604,20 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             edges = jnp.zeros_like(drops)
             applied = jnp.zeros_like(drops)
             n_replay = jnp.zeros_like(drops)
+            hbm_win = jnp.zeros_like(drops)
+
+            def count_windows(acc, rvalid):
+                # Per-tile DMA accounting of the streamed T2: each range
+                # message delivered to an "edges" handler fetches its two
+                # covering windows (the double buffer) — what the machine
+                # transfers, independent of the emulation's vectorized
+                # staging.
+                return acc + comm.run(
+                    lambda me, v: 2 * v.sum(dtype=jnp.int32), rvalid)
+
             for i in range(1, K):
+                if edge_space == "hbm" and chans[i - 1].work == "edges":
+                    hbm_win = count_windows(hbm_win, routed.recv_valid)
                 st, msgs, mvalid, d, work, npop, npush, nspill = comm.run(
                     make_mid(i), shard, st, routed.recv, routed.recv_valid,
                     routed.spill, routed.spill_valid, dyn_pops)
@@ -589,6 +635,8 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
                 die_round = die_round + routed.die_hist
                 sents.append(routed.sent)
                 spillv.append(routed.spill_valid)
+            if edge_space == "hbm" and chans[K - 1].work == "edges":
+                hbm_win = count_windows(hbm_win, routed.recv_valid)
             st, d, work, nspill = comm.run(stage_last, shard, st,
                                            routed.recv, routed.recv_valid,
                                            routed.spill,
@@ -630,14 +678,23 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
 
         # Cycle/energy model (repro.perf): the round costs its slowest
         # tile's compute plus the busiest link's serialization, each link
-        # priced by its class (local / ruche express / torus wrap).
+        # priced by its class (local / ruche express / torus wrap).  An
+        # HBM-resident shard additionally pays t_hbm/e_hbm per streamed
+        # edge word (the per-space pricing split; the terms are absent —
+        # not zero-multiplied — on all-VMEM runs, keeping them bit-stable
+        # with the pre-memspace model).
+        streaming = edge_space == "hbm"
+        hbm_edges_tile = hbm_win * jnp.int32(window) if streaming else None
+        hw_g = glob(comm.psum(hbm_win))
+        he_g = hw_g * jnp.int32(window) if streaming else hw_g
         comp = tile_compute_cycles(pp, n_pop, n_push, n_replay, edges,
-                                   applied)
+                                   applied, hbm_edges=hbm_edges_tile)
         cyc_round = (jnp.float32(pp.t_round) + glob(comm.pmax(comp))
                      + (link_g.astype(jnp.float32) * t_hop).max())
         energy_round = round_energy_pj(
             pp, comm.size, edges_g, applied_g, msgs_vec.sum(),
-            spills_vec.sum(), link_g, e_hop, cyc_round)
+            spills_vec.sum(), link_g, e_hop, cyc_round,
+            hbm_edges_g=he_g if streaming else None)
         cycles_acc, c_cyc = kahan_add(stats.cycles, kcomp[0], cyc_round)
         energy_acc, c_en = kahan_add(stats.energy_pj, kcomp[1],
                                      energy_round)
@@ -659,6 +716,8 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             cycles=cycles_acc,
             energy_pj=energy_acc,
             launches=stats.launches + jnp.int32(launch_tally.n),
+            hbm_windows=stats.hbm_windows + hw_g,
+            hbm_edges=stats.hbm_edges + he_g,
         )
         return st, stats, (c_cyc, c_en), glob(pending)
 
@@ -679,8 +738,11 @@ def init_state(comm, cfg: EngineConfig, v_chunk: int, value, frontier,
     prog = as_program(alg)
     lead = (comm.size,) if isinstance(comm, LocalComm) else ()
 
-    def mk_queue(cap, w):
-        q = queue_make(cap, w)
+    def mk_queue(ch):
+        # allocated through the memory-space registry (repro.mem): the
+        # channel's declared space is validated at config time.
+        q = queue_make(ch.qcap(cfg), ch.width, space=ch.resolve_space(cfg),
+                       label=f"queue[{ch.name}]")
         if lead:
             return Queue(jnp.broadcast_to(q.data, lead + q.data.shape),
                          jnp.broadcast_to(q.count, lead))
@@ -693,8 +755,7 @@ def init_state(comm, cfg: EngineConfig, v_chunk: int, value, frontier,
         acc=acc,
         frontier=frontier,
         next_frontier=jnp.zeros(lead + (v_chunk,), bool),
-        queues=tuple(mk_queue(ch.qcap(cfg), ch.width)
-                     for ch in prog.channels),
+        queues=tuple(mk_queue(ch) for ch in prog.channels),
         net_pressure=jnp.zeros(lead, jnp.int32),
     )
 
@@ -707,7 +768,7 @@ def run_engine(comm, cfg: EngineConfig, alg, shard: GraphShard,
     :class:`repro.core.program.Program`.
     """
     prog = as_program(alg)
-    prog.validate(cfg, comm.size)
+    prog.validate(cfg, comm.size, e_chunk, v_chunk)
     net = make_network(cfg, comm.size)
     rnd = make_round(comm, net, cfg, prog, e_chunk, v_chunk, shard)
 

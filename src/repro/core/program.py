@@ -49,9 +49,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.queues import f2i, i2f
-from repro.kernels.engine import (edge_scan_gather, fold_scatter,
-                                  frontier_pop, frontier_take, scatter_body,
-                                  segment_gather)
+from repro.kernels.engine import (edge_scan_gather, edge_scan_stream,
+                                  fold_scatter, frontier_pop, frontier_take,
+                                  scatter_body, segment_gather,
+                                  segment_stream)
+from repro.mem import check_alloc, check_budgets, resolve_window
 
 INF = jnp.float32(np.finfo(np.float32).max)
 
@@ -70,6 +72,14 @@ class Ctx(NamedTuple):
     :func:`repro.kernels.engine.fused_leg_call`): the building blocks then
     call the pure kernel *bodies* inline — same ops, same bits — instead
     of nesting a ``pallas_call`` per block.
+
+    ``edge_space`` is the resolved memory space of the tile's edge shard
+    (``repro.mem``; "vmem" = word-random resident, "hbm" = consumed
+    through double-buffered segment-DMA windows of ``hbm_window``
+    elements) — resolved by ``engine.make_round`` from
+    ``EngineConfig.edge_space`` and the Program's own pin via
+    :func:`resolve_edge_space`; the :func:`edge_scan` building block
+    dispatches on it.
     """
 
     cfg: object   # EngineConfig (static dataclass)
@@ -78,6 +88,8 @@ class Ctx(NamedTuple):
     v_chunk: int
     backend: str = "xla"
     fused: bool = False
+    edge_space: str = "vmem"
+    hbm_window: int = 0
 
 
 def _interpret(ctx: Ctx) -> bool:
@@ -169,6 +181,13 @@ class TaskSpec:
     the tile-grid kernels).  Handlers built from the dispatching building
     blocks below (``frontier_source`` / ``edge_scan`` / ``scatter_fold``)
     honor the resolved backend via ``Ctx.backend``.
+
+    ``space`` declares the memory space of this channel's task/spill
+    queue (``repro.mem``): ``None`` defaults to "vmem" — the queue is the
+    tile's working set, the paper's scratchpad FIFO.  The registry
+    validates the declaration at allocation time (HBM holds only bulk
+    edge shards), and ``Program.validate`` charges it against the
+    space's per-tile budget.
     """
 
     name: str
@@ -184,6 +203,13 @@ class TaskSpec:
     queue_cap: Optional[int] = None
     pop: Optional[int] = None
     backend: Optional[str] = None
+    space: Optional[str] = None
+
+    def resolve_space(self, cfg) -> str:
+        """The declared memory space of this channel's queue buffer."""
+        s = self.space if self.space is not None else "vmem"
+        check_alloc(s, "queue", f"queue[{self.name}]")
+        return s
 
     def resolve_backend(self, cfg) -> str:
         """The execution backend of this channel's legs under ``cfg``."""
@@ -228,11 +254,23 @@ class Program:
     handler output feeds channel ``i+1``.  Feedback edges (a fold re-arming
     the frontier) close the DAG *across* rounds through the frontier bitmap,
     exactly like the paper's T3 -> T1 loop.
+
+    Per-buffer memory-space declarations (``repro.mem``): ``edge_space``
+    is the tile's edge shard — ``None`` leaves it configurable
+    (``EngineConfig.edge_space`` picks "vmem" or "hbm" at run time); a
+    program whose handlers need word-random access to the shard (e.g.
+    triangles' closing binary search) *pins* it to "vmem", and asking the
+    config for "hbm" anyway is a :func:`resolve_edge_space` error.
+    ``state_space`` is the vertex state (value/acc/frontier bitmaps +
+    ptr/deg) — always the tile's working set, so "vmem".  Channel queues
+    declare their own space on each :class:`TaskSpec`.
     """
 
     name: str
     channels: tuple
     source: Optional[Callable] = None
+    edge_space: Optional[str] = None
+    state_space: str = "vmem"
 
     def min_caps(self, cfg, T: int) -> tuple:
         """Per-channel worst-case one-round queue inflow.
@@ -278,14 +316,81 @@ class Program:
             needs.append(need)
         return tuple(needs)
 
-    def validate(self, cfg, T: int):
-        """No-drop invariant: every task queue must absorb its worst-case
-        one-round inflow, even under static scheduling."""
+    def validate(self, cfg, T: int, e_chunk: Optional[int] = None,
+                 v_chunk: Optional[int] = None):
+        """No-drop invariant (every task queue must absorb its worst-case
+        one-round inflow, even under static scheduling) and — when the
+        shard chunks are known — the per-tile memory budget: the total
+        declared buffer footprint of each memory space must fit its
+        capacity (:func:`repro.mem.check_budgets`), replacing what would
+        otherwise surface as an opaque allocation failure mid-trace with
+        a config-time error naming the offending buffer and space."""
         for ch, need in zip(self.channels, self.min_caps(cfg, T)):
             cap = ch.qcap(cfg)
             assert cap >= need, (
                 f"program {self.name!r} channel {ch.name!r}: queue cap "
                 f"{cap} < worst-case inflow {need}")
+        if e_chunk is not None and v_chunk is not None:
+            check_budgets(self.name, self.tile_decls(cfg, T, e_chunk,
+                                                     v_chunk),
+                          getattr(cfg, "vmem_limit_bytes", 0))
+
+    def tile_decls(self, cfg, T: int, e_chunk: int, v_chunk: int) -> list:
+        """Per-tile buffer declarations, one ``(label, space, bytes)``
+        triple per engine buffer — the budget math of DESIGN.md "Memory
+        spaces":
+
+        * each channel's task/spill queue: ``qcap * width`` i32 words in
+          the channel's declared space;
+        * the vertex state: value/acc (f32), frontier/next_frontier
+          (bool) and ptr_start/deg (i32) — 18 bytes per owned vertex in
+          ``state_space``;
+        * the edge shard: dst (i32) + val (f32) — 8 bytes per placed edge
+          in the resolved edge space;
+        * when the shard streams from HBM, the VMEM double-buffer the
+          scan unit gathers through: 2 windows of 8-byte edge words per
+          scan channel, charged against VMEM.  (A tile's scan unit
+          drains one range message at a time, so the architectural
+          staging is one double buffer per channel — the emulator's
+          wider batch is a host-side artifact and is not charged.)
+        """
+        edge_space = resolve_edge_space(self, cfg)
+        decls = [(f"queue[{ch.name}]", ch.resolve_space(cfg),
+                  ch.qcap(cfg) * ch.width * 4) for ch in self.channels]
+        decls.append(("vertex-state", self.state_space, 18 * v_chunk))
+        decls.append((f"edge-shard[{self.name}]", edge_space, 8 * e_chunk))
+        if edge_space == "hbm":
+            window = resolve_window(getattr(cfg, "hbm_window", 0),
+                                    cfg.max_t2)
+            for ch in self.channels:
+                if ch.work == "edges":
+                    decls.append((f"dma-staging[{ch.name}]", "vmem",
+                                  2 * window * 8))
+        return decls
+
+
+def resolve_edge_space(prog: Program, cfg) -> str:
+    """The memory space of the tile's edge shard under ``cfg``.
+
+    A program-level pin (``Program.edge_space``) wins: triangles pins
+    "vmem" because its closing fold binary-searches the resident local
+    adjacency word-random — asking the config for "hbm" anyway is a
+    config error, not a silent de-optimization.  Unpinned programs take
+    ``EngineConfig.edge_space``; the registry validates that the space
+    can hold edge shards at all.
+    """
+    want = getattr(cfg, "edge_space", "vmem")
+    if prog.edge_space is not None:
+        if want not in ("vmem", prog.edge_space):
+            raise ValueError(
+                f"program {prog.name!r} pins its edge shard to "
+                f"{prog.edge_space!r} (a handler needs word-random access "
+                f"to the resident shard), but cfg.edge_space={want!r}")
+        space = prog.edge_space
+    else:
+        space = want
+    check_alloc(space, "edge", f"edge-shard[{prog.name}]")
+    return space
 
 
 def sized_cfg(cfg, program: Program, T: int):
@@ -386,7 +491,21 @@ def edge_scan(emit_rows: Callable) -> Callable:
 
     def handler(ctx: Ctx, me, sh, st, recv, rv):
         r_start, r_stop = recv[:, 0], recv[:, 1]
-        if ctx.backend == "pallas":
+        if ctx.edge_space == "hbm":
+            # HBM-resident shard: both backends consume it through the
+            # double-buffered segment-DMA stream (the xla path runs the
+            # same pure body the fused kernel does — space equivalence
+            # and backend equivalence hold by construction).
+            if ctx.backend == "pallas" and not ctx.fused:
+                nb, w, jvalid = edge_scan_stream(
+                    sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
+                    ctx.cfg.max_t2, ctx.hbm_window,
+                    interpret=_interpret(ctx))
+            else:
+                nb, w, jvalid = segment_stream(
+                    sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
+                    ctx.cfg.max_t2, ctx.hbm_window)
+        elif ctx.backend == "pallas":
             if ctx.fused:  # already inside the leg's single pallas_call
                 nb, w, jvalid = segment_gather(
                     sh.edge_dst, sh.edge_val, r_start, r_stop, rv,
@@ -626,6 +745,10 @@ def _make_triangles_program() -> Program:
     return Program(
         name="triangles",
         source=frontier_source(payload),
+        # close_fold binary-searches the resident local adjacency
+        # word-random — the shard must stay VMEM-resident (pinned; a
+        # cfg.edge_space="hbm" request is a resolve_edge_space error).
+        edge_space="vmem",
         channels=(
             TaskSpec("range", width=3, owner="edge", knobs="range",
                      queued=True, transform=range_split,

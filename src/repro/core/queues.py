@@ -18,6 +18,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.mem import alloc
+
 
 class Queue(NamedTuple):
     data: jax.Array  # (cap, width) int32
@@ -34,8 +36,13 @@ def i2f(x: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(x, jnp.float32)
 
 
-def queue_make(cap: int, width: int) -> Queue:
-    return Queue(jnp.zeros((cap, width), jnp.int32), jnp.zeros((), jnp.int32))
+def queue_make(cap: int, width: int, space: str = "vmem",
+               label: str = "queue") -> Queue:
+    """Allocate a queue in its declared memory space (``repro.mem``) —
+    the registry rejects spaces that cannot hold queue buffers (HBM holds
+    only bulk edge shards) at config time, naming ``label``."""
+    data = alloc(space, "queue", (cap, width), jnp.int32, label=label)
+    return Queue(data, jnp.zeros((), jnp.int32))
 
 
 def queue_free(q: Queue) -> jax.Array:

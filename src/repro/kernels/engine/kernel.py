@@ -154,6 +154,53 @@ def segment_gather(edge_dst: jax.Array, edge_val: jax.Array,
     return nb, edge_val[eidx_c], jvalid & (nb >= 0)
 
 
+def segment_stream(edge_dst: jax.Array, edge_val: jax.Array,
+                   start: jax.Array, stop: jax.Array, rv: jax.Array,
+                   max_t2: int, window: int):
+    """Body of :func:`edge_scan_stream`: T2 over an **HBM-resident** edge
+    shard, consumed through double-buffered segment DMA windows.
+
+    The prefetched head flit of each delivered range message carries the
+    global edge index — the true scalar-prefetch form of T2: the local
+    offset ``start % e_chunk`` is known *before* the edge data is touched,
+    so the engine issues the window fetch for message ``r`` while message
+    ``r-1`` computes.  This body is the value-exact emulation of that
+    discipline: each message stages the two consecutive ``window``-sized
+    DMA windows covering its segment (``base = (local0 // window) *
+    window``; the aligned window plus its successor — the double buffer),
+    then gathers its ``<= max_t2`` edges out of the staging buffer only.
+
+    Bit-identity with the VMEM-direct :func:`segment_gather`: upstream
+    ``range_split`` bounds every message at the chunk border and at
+    MAX_T2, and :func:`repro.mem.resolve_window` guarantees ``window >=
+    max_t2`` — so a segment starting anywhere in the aligned window ends
+    strictly inside the next one, and every *valid* lane reads the same
+    shard element either way (invalid lanes are don't-cares masked by
+    ``jvalid`` at every consumer).  The engine counts 2 windows per
+    delivered message into ``Stats.hbm_windows`` and prices the streamed
+    words at ``t_hbm``/``e_hbm`` (DESIGN.md "Memory spaces").
+
+    Returns (nb, w, jvalid), each (R, max_t2) — same contract as
+    :func:`segment_gather`.
+    """
+    e_chunk = edge_dst.shape[0]
+    length = jnp.where(rv, stop - start, 0)
+    local0 = jnp.where(rv, start % e_chunk, 0)
+    base = (local0 // window) * window        # aligned window start
+    # Stage the double buffer: 2*window consecutive elements from base.
+    k = jnp.arange(2 * window, dtype=jnp.int32)[None, :]
+    sidx = jnp.minimum(base[:, None] + k, e_chunk - 1)  # (R, 2*window)
+    stage_dst = edge_dst[sidx]
+    stage_val = edge_val[sidx]
+    # Gather the segment out of the staging buffer only.
+    j = jnp.arange(max_t2, dtype=jnp.int32)[None, :]
+    jvalid = rv[:, None] & (j < length[:, None])
+    off = jnp.minimum((local0 - base)[:, None] + j, 2 * window - 1)
+    nb = jnp.take_along_axis(stage_dst, off, axis=1)
+    w = jnp.take_along_axis(stage_val, off, axis=1)
+    return nb, w, jvalid & (nb >= 0)
+
+
 def scatter_body(target: jax.Array, lidx: jax.Array, vals: jax.Array,
                  valid: jax.Array, op: str):
     """Body of :func:`fold_scatter`: the T3 owner-local scatter-min /
@@ -440,6 +487,52 @@ def edge_scan_gather(edge_dst: jax.Array, edge_val: jax.Array,
     record()
     return _edge_scan_gather(edge_dst, edge_val, start, stop, rv, max_t2,
                              interpret)
+
+
+# --------------------------------------------------------------------------
+# T2 over an HBM-resident shard: double-buffered segment-DMA stream.
+# --------------------------------------------------------------------------
+
+def _edge_stream_kernel(edge_dst_ref, edge_val_ref, start_ref, stop_ref,
+                        rv_ref, nb_ref, w_ref, jvalid_ref, *, window):
+    nb, w, jvalid = segment_stream(
+        edge_dst_ref[...], edge_val_ref[...], start_ref[...], stop_ref[...],
+        rv_ref[...], nb_ref.shape[1], window)
+    nb_ref[...] = nb
+    w_ref[...] = w
+    jvalid_ref[...] = jvalid
+
+
+@functools.partial(jax.jit, static_argnames=("max_t2", "window", "interpret"))
+def _edge_scan_stream(edge_dst, edge_val, start, stop, rv, max_t2, window,
+                      interpret):
+    r = start.shape[0]
+    return pl.pallas_call(
+        functools.partial(_edge_stream_kernel, window=window),
+        out_shape=(jax.ShapeDtypeStruct((r, max_t2), jnp.int32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.float32),
+                   jax.ShapeDtypeStruct((r, max_t2), jnp.bool_)),
+        interpret=interpret,
+    )(edge_dst, edge_val, start, stop, rv)
+
+
+def edge_scan_stream(edge_dst: jax.Array, edge_val: jax.Array,
+                     start: jax.Array, stop: jax.Array, rv: jax.Array,
+                     max_t2: int, window: int, interpret: bool = True):
+    """The T2 segment scan when the tile's edge shard is declared in HBM:
+    each delivered range message stages its two covering DMA windows into
+    VMEM (the double buffer) and gathers its segment from the staging
+    buffer — never word-random from the shard (:func:`segment_stream` is
+    the body; the fused leg calls it directly via ``Ctx.fused``).
+
+    Bit-identical in every valid lane to :func:`edge_scan_gather` on the
+    same shard (the space-equivalence contract,
+    ``tests/test_memspace.py``); requires ``window >= max_t2``
+    (:func:`repro.mem.resolve_window`).
+    """
+    record()
+    return _edge_scan_stream(edge_dst, edge_val, start, stop, rv, max_t2,
+                             window, interpret)
 
 
 # --------------------------------------------------------------------------

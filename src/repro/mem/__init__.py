@@ -1,0 +1,186 @@
+"""Memory spaces for tile buffers: a declared, validated VMEM/HBM split.
+
+Dalorex's core claim is that every memory operation is tile-local — but
+"local" does not have to mean "in the tile's SRAM".  This module makes the
+memory space of each task-channel buffer (queue, edge shard, vertex state)
+a *declared attribute* with per-space capacity, window-granularity and
+allocation rules — the Exo/SYS_ATL custom-``Memory`` idiom — instead of an
+implicit "everything fits in VMEM" assumption baked into the kernels:
+
+* :class:`MemSpace` — one addressable space: per-tile capacity in bytes,
+  the DMA window granularity (elements) for streamed spaces, and the
+  buffer *kinds* it may hold (``"queue"`` / ``"edge"`` / ``"state"``).
+* The registry — ``VMEM`` (the tile's fast scratchpad: every kind, no
+  streaming), ``HBM`` (large, ``streamed=True``: holds edge shards that
+  the engine consumes through double-buffered segment DMA windows —
+  see ``kernels/engine/kernel.py::segment_stream``), and ``HOST`` (a
+  registered placeholder for a future host-memory spill tier: declared
+  now so configs can name it, allocatable later — ``kinds=()`` makes any
+  allocation a clear config-time error instead of a silent fiction).
+* :func:`alloc` / :func:`check_alloc` — every engine buffer allocation
+  goes through here, so placing a buffer in a space that cannot hold its
+  kind fails at config time with the buffer's *label* in the message,
+  not as an opaque Pallas allocation failure mid-trace.
+* :func:`footprint_bytes` / :func:`space_budget` — the budget math
+  ``Program.validate`` uses to check each tile's total declared footprint
+  against the per-space capacity (DESIGN.md "Memory spaces").
+* :func:`resolve_window` — the DMA window sizing rule: a window must
+  cover MAX_T2 (one bounded range message), because the double-buffer
+  correctness argument is "any MAX_T2-bounded segment fits in two
+  consecutive windows".
+
+Spaces are *priced* separately by the perf model (``t_hbm`` / ``e_hbm``
+vs ``t_sram`` / ``e_sram`` in :mod:`repro.perf`), and per-space traffic
+surfaces as ``Stats.hbm_windows`` / ``Stats.hbm_edges``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Buffer kinds a space may be asked to hold.
+KINDS = ("queue", "edge", "state")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemSpace:
+    """One addressable memory space of a tile.
+
+    ``capacity_bytes`` is the per-tile budget ``Program.validate`` checks
+    declared footprints against.  ``window`` is the minimum DMA transfer
+    granularity in *elements* for streamed spaces (VMEM is word-random:
+    window 1).  ``kinds`` lists the buffer kinds allocatable here — HBM
+    holds only bulk ``"edge"`` shards (queues and vertex state are the
+    tile's working set and stay SRAM-resident, like the paper's
+    scratchpad FIFOs).  ``streamed`` marks spaces the engine may only
+    touch through windowed DMA, never word-at-a-time.
+    """
+
+    name: str
+    capacity_bytes: int
+    window: int = 1
+    kinds: tuple = KINDS
+    streamed: bool = False
+
+
+#: The registry.  VMEM capacity defaults to the TPU-core-like 16 MiB the
+#: tile-grid kernels actually get; override per run with
+#: ``EngineConfig.vmem_limit_bytes`` to model smaller paper-era tiles.
+VMEM = MemSpace("vmem", capacity_bytes=16 * 1024 * 1024)
+HBM = MemSpace("hbm", capacity_bytes=8 * 1024 * 1024 * 1024, window=128,
+               kinds=("edge",), streamed=True)
+HOST = MemSpace("host", capacity_bytes=64 * 1024 * 1024 * 1024, window=4096,
+                kinds=(), streamed=True)  # future spill tier: not yet
+                                          # allocatable (kinds=())
+
+_REGISTRY: dict = {}
+
+
+def register(space: MemSpace) -> MemSpace:
+    """Add (or replace) a space in the registry; returns it."""
+    _REGISTRY[space.name] = space
+    return space
+
+
+for _s in (VMEM, HBM, HOST):
+    register(_s)
+
+
+def get_space(name: str) -> MemSpace:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown memory space {name!r}; registered: "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def check_alloc(space: str, kind: str, label: str) -> MemSpace:
+    """Validate that buffer ``label`` of ``kind`` may live in ``space``.
+
+    Raises ``ValueError`` naming the buffer and the space — the
+    config-time twin of what would otherwise surface as an opaque
+    allocation failure inside a kernel trace.
+    """
+    sp = get_space(space)
+    assert kind in KINDS, f"unknown buffer kind {kind!r}"
+    if kind not in sp.kinds:
+        holds = f"holds only {sp.kinds}" if sp.kinds else \
+            "is not yet allocatable (a declared future tier)"
+        raise ValueError(
+            f"buffer {label!r} (kind {kind!r}) cannot live in memory "
+            f"space {sp.name!r}: {sp.name!r} {holds}")
+    return sp
+
+
+def alloc(space: str, kind: str, shape: tuple, dtype, label: str):
+    """Allocate a zeroed buffer in ``space`` after :func:`check_alloc`.
+
+    This is the single chokepoint engine buffers are created through
+    (``core/queues.queue_make``), so a bad declaration fails here with
+    the buffer's label, before any kernel traces.
+    """
+    check_alloc(space, kind, label)
+    return jnp.zeros(shape, dtype)
+
+
+def footprint_bytes(shape: tuple, dtype) -> int:
+    """Declared size of one buffer, in bytes."""
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def space_budget(space: str, override_bytes: int = 0) -> int:
+    """The per-tile capacity to validate against: the registry's, unless
+    the run overrides it (``EngineConfig.vmem_limit_bytes`` models a
+    smaller tile without re-registering the space)."""
+    return int(override_bytes) if override_bytes else \
+        get_space(space).capacity_bytes
+
+
+def resolve_window(cfg_window: int, max_t2: int) -> int:
+    """The DMA window (elements) for an HBM-resident edge shard.
+
+    ``cfg_window == 0`` auto-sizes to the next power of two >= MAX_T2 and
+    >= the space's transfer granularity.  An explicit window smaller than
+    MAX_T2 is a config error: the double-buffer correctness argument
+    (DESIGN.md "Memory spaces") requires any MAX_T2-bounded segment to
+    fit in two consecutive windows, i.e. ``window >= max_t2``.
+    """
+    gran = get_space("hbm").window
+    if cfg_window == 0:
+        w = 1 << (max(int(max_t2), 1) - 1).bit_length()
+        return max(w, gran)
+    if cfg_window < max_t2:
+        raise ValueError(
+            f"hbm_window={cfg_window} < max_t2={max_t2}: a DMA window "
+            f"must cover one bounded range message (the double-buffer "
+            f"invariant); use hbm_window=0 to auto-size")
+    return int(cfg_window)
+
+
+def check_budgets(program_name: str, decls: list, vmem_limit_bytes: int = 0):
+    """Validate per-tile declared footprints against each space's budget.
+
+    ``decls`` is a list of ``(label, space, nbytes)`` declarations — one
+    per tile buffer.  Sums per space and raises ``ValueError`` naming the
+    program, the over-budget space, the totals, and the single largest
+    offending buffer (the one to move or shrink).  Called by
+    ``Program.validate``; unit-tested in ``tests/test_memspace.py``.
+    """
+    by_space: dict = {}
+    for label, space, nbytes in decls:
+        by_space.setdefault(space, []).append((label, int(nbytes)))
+    for space, bufs in sorted(by_space.items()):
+        budget = space_budget(
+            space, vmem_limit_bytes if space == "vmem" else 0)
+        total = sum(b for _, b in bufs)
+        if total > budget:
+            big_label, big_bytes = max(bufs, key=lambda lb: lb[1])
+            raise ValueError(
+                f"program {program_name!r}: memory space {space!r} over "
+                f"budget on a tile: declared buffers total {total} B > "
+                f"{budget} B capacity; largest buffer is {big_label!r} "
+                f"({big_bytes} B in {space!r}) — move it to another "
+                f"space (e.g. EngineConfig.edge_space='hbm' for the edge "
+                f"shard) or raise the budget")

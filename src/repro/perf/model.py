@@ -82,6 +82,10 @@ class PerfParams:
     t_hop_port: int = 0       # ideal-crossbar port: no wire serialization
     t_hop_die: int = 4        # die-to-die express link (serdes + off-die
                               # wire: slowest hop class, fewest links)
+    t_hbm: int = 4            # per 64-bit edge word streamed from an
+                              # HBM-resident shard (amortized over the
+                              # double-buffered DMA window; conservative
+                              # no-overlap, like the rest of the model)
     t_round: int = 1          # fixed per-round pipeline overhead
     # --- energy costs (pJ) ---
     e_alu: float = 0.5
@@ -94,6 +98,10 @@ class PerfParams:
     e_hop_wrap: float = 5.0   # ring-closing return wire
     e_hop_port: float = 2.0   # ideal-crossbar switch traversal
     e_hop_die: float = 12.0   # off-die serdes crossing (hier backend)
+    e_hbm: float = 250.0      # per 64-bit edge word streamed from HBM
+                              # (~3.9 pJ/bit, HBM2-era — the ~50x-vs-SRAM
+                              # gap the UPMEM/PIM literature prices; the
+                              # reason "move compute to the data" wins)
     e_leak_tile_cycle: float = 0.05  # static leakage, per tile per cycle
 
     # Derived per-event costs of the two handler kinds ("edges"-tagged
@@ -173,14 +181,21 @@ def die_crossing_frac(stats) -> float:
 
 
 def tile_compute_cycles(params: PerfParams, pops, pushes, spill_replays,
-                        edges, updates):
-    """Per-tile compute cycles of one round (jnp, per-device shaped)."""
+                        edges, updates, hbm_edges=None):
+    """Per-tile compute cycles of one round (jnp, per-device shaped).
+
+    ``hbm_edges`` — edge words streamed from an HBM-resident shard this
+    round (``None`` on all-VMEM runs: the term is absent, not
+    zero-multiplied, so pre-memspace cycle totals stay bit-stable)."""
     f = jnp.float32
-    return (pops.astype(f) * params.t_pop
-            + pushes.astype(f) * params.t_push
-            + spill_replays.astype(f) * params.t_spill
-            + edges.astype(f) * params.t_scan
-            + updates.astype(f) * params.t_fold)
+    out = (pops.astype(f) * params.t_pop
+           + pushes.astype(f) * params.t_push
+           + spill_replays.astype(f) * params.t_spill
+           + edges.astype(f) * params.t_scan
+           + updates.astype(f) * params.t_fold)
+    if hbm_edges is not None:
+        out = out + hbm_edges.astype(f) * params.t_hbm
+    return out
 
 
 def leak_pj(params: PerfParams, T: int, cycles):
@@ -192,16 +207,21 @@ def leak_pj(params: PerfParams, T: int, cycles):
 
 def round_energy_pj(params: PerfParams, T: int, edges_g, updates_g,
                     msgs_total, spills_total, link_flits_g, e_hop,
-                    cycles_round):
+                    cycles_round, hbm_edges_g=None):
     """Global energy of one round, linear in the round's Stats increments
-    (so totals reconcile with :func:`energy_from_totals`)."""
+    (so totals reconcile with :func:`energy_from_totals`).  ``hbm_edges_g``
+    prices the per-space split: ``None`` on all-VMEM runs (term absent,
+    keeping pre-memspace energy totals bit-stable)."""
     f = jnp.float32
-    return (edges_g.astype(f) * params.e_scan
-            + updates_g.astype(f) * params.e_fold
-            + msgs_total.astype(f) * (params.e_push + params.e_pop)
-            + spills_total.astype(f) * params.e_spill
-            + (link_flits_g.astype(f) * e_hop).sum()
-            + leak_pj(params, T, cycles_round))
+    out = (edges_g.astype(f) * params.e_scan
+           + updates_g.astype(f) * params.e_fold
+           + msgs_total.astype(f) * (params.e_push + params.e_pop)
+           + spills_total.astype(f) * params.e_spill
+           + (link_flits_g.astype(f) * e_hop).sum()
+           + leak_pj(params, T, cycles_round))
+    if hbm_edges_g is not None:
+        out = out + hbm_edges_g.astype(f) * params.e_hbm
+    return out
 
 
 def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
@@ -214,11 +234,13 @@ def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
     spills = float(np.asarray(stats.spills).sum())
     flits = np.asarray(stats.flits_per_link, np.float64)
     cycles = float(np.asarray(stats.cycles))
+    hbm_edges = float(np.asarray(getattr(stats, "hbm_edges", 0)))
     return (edges * params.e_scan + updates * params.e_fold
             + msgs * (params.e_push + params.e_pop)
             + spills * params.e_spill
             + float((flits * np.asarray(e_hop, np.float64)).sum())
-            + float(np.asarray(leak_pj(params, T, np.float32(cycles)))))
+            + float(np.asarray(leak_pj(params, T, np.float32(cycles))))
+            + hbm_edges * params.e_hbm)
 
 
 def serving_metrics(queries: int, cycles: float, energy_pj: float,
@@ -273,4 +295,15 @@ def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
         lk = float(np.asarray(leak_pj(params, T, np.float32(cycles))))
         out["leak_pj"] = round(lk, 1)
         out["leak_frac"] = round(lk / energy, 3) if energy > 0 else 0.0
+    # Per-space energy split (ADDITIVE — only on runs whose edge shard
+    # streamed from HBM, so all-VMEM baseline rows stay byte-stable):
+    # the streamed words priced at e_hbm, and their share of the total.
+    hbm_edges = float(np.asarray(getattr(stats, "hbm_edges", 0)))
+    if hbm_edges > 0:
+        hbm_pj = hbm_edges * params.e_hbm
+        out["hbm_pj"] = round(hbm_pj, 1)
+        out["hbm_frac"] = round(hbm_pj / energy, 3) if energy > 0 else 0.0
+        if edges > 0:
+            out["pj_per_edge_hbm"] = round(hbm_pj / edges, 3)
+            out["pj_per_edge_sram"] = round((energy - hbm_pj) / edges, 3)
     return out

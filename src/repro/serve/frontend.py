@@ -221,7 +221,7 @@ class Frontend:
         self.policy = policy
         self.mesh = mesh
         self.prog = as_program(CLASSIC[app])
-        self.prog.validate(cfg, pg.T)
+        self.prog.validate(cfg, pg.T, pg.e_chunk, pg.v_chunk)
 
     # -- public ------------------------------------------------------------
 

@@ -225,7 +225,7 @@ def spmd_lanes_call(pg: PartitionedGraph, prog, cfg: EngineConfig, value,
 
     T = pg.T
     prog = as_program(prog)
-    prog.validate(cfg, T)
+    prog.validate(cfg, T, pg.e_chunk, pg.v_chunk)
     comm = AxisComm(axis, T)
     net = make_network(cfg, T)
     if acc is None:
@@ -329,7 +329,7 @@ def multi_source(pg: PartitionedGraph, app: str, sources,
     if mesh is None:
         shard = GraphShard(pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val)
         prog = as_program(alg_spec)
-        prog.validate(cfg, pg.T)
+        prog.validate(cfg, pg.T, pg.e_chunk, pg.v_chunk)
         out = local_lanes_call(prog, cfg, pg.T, pg.e_chunk, pg.v_chunk,
                                shard, value, frontier,
                                jnp.zeros_like(value))

@@ -1,0 +1,364 @@
+"""Memory-space abstraction tests (PR8, DESIGN.md "Memory spaces").
+
+The registry (``repro.mem``), the config-time budget validator, the
+double-buffered HBM segment-DMA stream (``segment_stream``) and the
+end-to-end space-equivalence contract: an HBM-streamed edge shard must be
+bit-identical to the VMEM-resident run in values and in every Stats field
+except the per-space counters and the per-space pricing.
+
+Selected in tier-1 and also run as an explicit CI step via
+``-m "memspace and not slow"``; the shard_map twin runs under ``-m slow``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+from repro.core.program import as_program, resolve_edge_space
+from repro.kernels.engine import segment_gather, segment_stream
+from repro.mem import (check_alloc, check_budgets, get_space, resolve_window,
+                       space_budget)
+
+pytestmark = pytest.mark.memspace
+
+# Stats fields allowed to differ between a VMEM-resident and an
+# HBM-streamed run of the same program: the per-space counters and the
+# per-space pricing they feed (plus launches, which tracks backend
+# dispatches, not the program).
+SPACE_DEPENDENT = ("cycles", "energy_pj", "launches", "hbm_windows",
+                   "hbm_edges")
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=128, cap_updq=2048,
+                max_rounds=20000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def g():
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def pg(g):
+    return alg.prepare(g, T=4)
+
+
+def root_of(g):
+    return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+
+
+# --------------------------------------------------------------------------
+# The registry: per-space allocation rules.
+# --------------------------------------------------------------------------
+
+def test_registry_spaces_exist():
+    assert get_space("vmem").capacity_bytes < get_space("hbm").capacity_bytes
+    assert get_space("hbm").streamed and not get_space("vmem").streamed
+
+
+def test_unknown_space_raises():
+    with pytest.raises(ValueError, match="nosuch"):
+        get_space("nosuch")
+
+
+def test_hbm_cannot_hold_queues():
+    # HBM holds only streamed edge shards — a task queue is word-random
+    with pytest.raises(ValueError, match=r"'queue\[update\]'.*'hbm'"):
+        check_alloc("hbm", "queue", "queue[update]")
+
+
+def test_host_tier_not_yet_allocatable():
+    with pytest.raises(ValueError, match="not yet allocatable"):
+        check_alloc("host", "edge", "edge-shard[bfs]")
+
+
+def test_queue_make_rejects_hbm():
+    from repro.core.queues import queue_make
+    with pytest.raises(ValueError, match="queue"):
+        queue_make(16, 3, space="hbm", label="queue[range]")
+
+
+def test_resolve_window_rules():
+    gran = get_space("hbm").window
+    # auto: next pow2 >= max_t2, floored at the HBM transfer granularity
+    assert resolve_window(0, 8) == gran
+    assert resolve_window(0, 200) == 256
+    # explicit: anything >= max_t2 is honored, even below the granularity
+    assert resolve_window(8, 8) == 8
+    assert resolve_window(640, 8) == 640
+    # explicit below max_t2 breaks the double-buffer invariant
+    with pytest.raises(ValueError, match="hbm_window=4 < max_t2=8"):
+        resolve_window(4, 8)
+
+
+# --------------------------------------------------------------------------
+# The config-time budget validator.
+# --------------------------------------------------------------------------
+
+def test_check_budgets_error_names_buffer_and_space():
+    decls = [("queue[update]", "vmem", 9000), ("vertex-state", "vmem", 500)]
+    with pytest.raises(ValueError) as ei:
+        check_budgets("bfs", decls, vmem_limit_bytes=4096)
+    msg = str(ei.value)
+    assert "program 'bfs'" in msg
+    assert "memory space 'vmem' over budget" in msg
+    assert "9500 B > 4096 B" in msg
+    assert "'queue[update]' (9000 B in 'vmem')" in msg  # the one to move
+    assert "edge_space='hbm'" in msg  # remediation hint
+
+
+def test_space_budget_override():
+    assert space_budget("vmem") == get_space("vmem").capacity_bytes
+    assert space_budget("vmem", override_bytes=4096) == 4096
+
+
+def test_engine_rejects_over_budget_config(pg, g):
+    cfg = small_cfg(vmem_limit_bytes=1024)
+    with pytest.raises(ValueError, match="over budget"):
+        alg.bfs(pg, root_of(g), cfg)
+
+
+def test_triangles_pins_edge_shard_to_vmem(g):
+    gs = alg.symmetrize(g)
+    pgt = alg.prepare_triangles(gs, 4)
+    with pytest.raises(ValueError, match="pins its edge shard to 'vmem'"):
+        alg.triangles(pgt, small_cfg(edge_space="hbm"))
+    # vmem (the pin) still runs
+    res = alg.triangles(pgt, small_cfg())
+    assert (res.values == ref.triangles_ref(gs, key=pgt.place)).all()
+
+
+def test_resolve_edge_space_validates(pg):
+    prog = as_program(alg.BFS)
+    assert resolve_edge_space(prog, small_cfg()) == "vmem"
+    assert resolve_edge_space(prog, small_cfg(edge_space="hbm")) == "hbm"
+    with pytest.raises(ValueError, match="not yet allocatable"):
+        resolve_edge_space(prog, small_cfg(edge_space="host"))
+
+
+# --------------------------------------------------------------------------
+# segment_stream == segment_gather (the kernel-level value contract).
+# --------------------------------------------------------------------------
+
+def _random_segments(rng, e_chunk, max_t2, R, ragged_last=False):
+    """Range messages as range_split emits them: each segment <= max_t2
+    edges, contiguous, not crossing the chunk border."""
+    length = rng.integers(1, max_t2 + 1, size=R).astype(np.int32)
+    local0 = (rng.integers(0, e_chunk, size=R) % (e_chunk - length)) \
+        .astype(np.int32)
+    if ragged_last:  # a segment ending exactly at the chunk border
+        length[-1] = max_t2
+        local0[-1] = e_chunk - max_t2
+    rv = rng.random(R) < 0.8
+    rv[0] = True
+    return local0, (local0 + length), np.asarray(rv)
+
+
+@pytest.mark.parametrize("window_mult,ragged", [(1, False), (1, True),
+                                                (2, False), (16, True)])
+def test_segment_stream_matches_gather(window_mult, ragged):
+    rng = np.random.default_rng(7)
+    e_chunk, max_t2, R = 256, 8, 24
+    window = max_t2 * window_mult  # window == max_t2 is the tight corner
+    edge_dst = rng.integers(-1, 64, size=e_chunk).astype(np.int32)
+    edge_val = rng.random(e_chunk).astype(np.float32)
+    start, stop, rv = _random_segments(rng, e_chunk, max_t2, R,
+                                       ragged_last=ragged)
+    nb_g, w_g, jv_g = segment_gather(edge_dst, edge_val, start, stop, rv,
+                                     max_t2)
+    nb_s, w_s, jv_s = segment_stream(edge_dst, edge_val, start, stop, rv,
+                                     max_t2, window)
+    np.testing.assert_array_equal(np.asarray(jv_g), np.asarray(jv_s))
+    jv = np.asarray(jv_g)
+    # valid lanes are bit-identical; invalid lanes are don't-cares
+    np.testing.assert_array_equal(np.asarray(nb_g)[jv], np.asarray(nb_s)[jv])
+    np.testing.assert_array_equal(np.asarray(w_g)[jv], np.asarray(w_s)[jv])
+
+
+def test_segment_stream_empty_frontier():
+    e_chunk, max_t2, window = 64, 8, 8
+    edge_dst = np.arange(e_chunk, dtype=np.int32)
+    edge_val = np.ones(e_chunk, dtype=np.float32)
+    z = np.zeros(4, dtype=np.int32)
+    rv = np.zeros(4, dtype=bool)
+    nb, w, jv = segment_stream(edge_dst, edge_val, z, z, rv, max_t2, window)
+    assert not np.asarray(jv).any()
+
+
+# --------------------------------------------------------------------------
+# End-to-end space equivalence: vmem vs hbm, xla and pallas.
+# --------------------------------------------------------------------------
+
+def assert_space_equivalent(r_hbm, r_vmem, label):
+    np.testing.assert_array_equal(r_hbm.values, r_vmem.values,
+                                  err_msg=f"values ({label})")
+    for f in r_vmem.stats._fields:
+        if f in SPACE_DEPENDENT:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_hbm.stats, f)),
+            np.asarray(getattr(r_vmem.stats, f)),
+            err_msg=f"stats.{f} ({label})")
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("app", ["bfs", "spmv"])
+def test_hbm_run_bit_identical_to_vmem(pg, g, app, backend):
+    x = np.linspace(0.5, 1.5, g.num_vertices).astype(np.float32)
+    run = (lambda cfg: alg.bfs(pg, root_of(g), cfg)) if app == "bfs" \
+        else (lambda cfg: alg.spmv(pg, x, cfg))
+    r_vmem = run(small_cfg(backend=backend))
+    r_hbm = run(small_cfg(backend=backend, edge_space="hbm"))
+    assert_space_equivalent(r_hbm, r_vmem, f"{app}/{backend}")
+    window = resolve_window(0, small_cfg().max_t2)
+    assert int(r_hbm.stats.hbm_windows) > 0
+    assert int(r_hbm.stats.hbm_edges) == \
+        int(r_hbm.stats.hbm_windows) * window
+    assert int(r_vmem.stats.hbm_windows) == 0  # vmem runs never stream
+    assert int(r_vmem.stats.hbm_edges) == 0
+    # the streamed words are priced: same work, strictly costlier
+    assert float(r_hbm.stats.cycles) > float(r_vmem.stats.cycles)
+    assert float(r_hbm.stats.energy_pj) > float(r_vmem.stats.energy_pj)
+
+
+def test_hbm_pallas_matches_hbm_xla_exactly(pg, g):
+    """Same space, different backend: everything matches, pricing
+    included (the backend contract of fig11 extended to the streamed
+    path; launches excluded by design)."""
+    root = root_of(g)
+    rx = alg.bfs(pg, root, small_cfg(edge_space="hbm"))
+    for fuse in (True, False):
+        rp = alg.bfs(pg, root, small_cfg(edge_space="hbm",
+                                         backend="pallas",
+                                         pallas_fuse=fuse))
+        np.testing.assert_array_equal(rp.values, rx.values)
+        for f in rx.stats._fields:
+            if f == "launches":
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rp.stats, f)),
+                np.asarray(getattr(rx.stats, f)),
+                err_msg=f"stats.{f} (pallas_fuse={fuse})")
+        assert int(rp.stats.launches) > 0
+
+
+def test_explicit_window_changes_pricing_not_values(pg, g):
+    root = root_of(g)
+    tight = alg.bfs(pg, root, small_cfg(edge_space="hbm", hbm_window=8))
+    auto = alg.bfs(pg, root, small_cfg(edge_space="hbm"))
+    assert_space_equivalent(tight, auto, "window=8 vs auto")
+    assert int(tight.stats.hbm_windows) == int(auto.stats.hbm_windows)
+    # same window COUNT, fewer words per window -> cheaper streaming
+    assert int(tight.stats.hbm_edges) < int(auto.stats.hbm_edges)
+    assert float(tight.stats.energy_pj) < float(auto.stats.energy_pj)
+
+
+def test_hbm_energy_reconciles_and_prices_e_hbm(pg, g):
+    from repro.noc import make_network
+    from repro.perf import energy_from_totals
+    cfg = small_cfg(edge_space="hbm")
+    s = alg.bfs(pg, root_of(g), cfg).stats
+    assert int(s.hbm_edges) > 0
+    net = make_network(cfg, pg.T)
+    want = energy_from_totals(s, cfg.perf, net, pg.T)
+    assert float(s.energy_pj) == pytest.approx(want, rel=1e-4)
+    # the HBM term is exactly hbm_edges * e_hbm: repricing e_hbm to zero
+    # must remove it and nothing else
+    import dataclasses
+    zeroed = dataclasses.replace(cfg.perf, e_hbm=0.0)
+    assert want - energy_from_totals(s, zeroed, net, pg.T) == \
+        pytest.approx(int(s.hbm_edges) * cfg.perf.e_hbm, rel=1e-6)
+
+
+def test_beyond_vmem_acceptance(pg, g):
+    """The PR's acceptance property: a budget the resident shard cannot
+    fit rejects the all-VMEM layout at config time, while the HBM layout
+    runs the same graph end to end, bit-identical to the unconstrained
+    vmem run, with nonzero per-space counters."""
+    import dataclasses
+    root = root_of(g)
+    base = small_cfg()
+    hbm = small_cfg(edge_space="hbm", hbm_window=base.max_t2)
+    prog = as_program(alg.BFS)
+
+    def vmem_bytes(c):
+        return sum(b for _, sp, b in
+                   prog.tile_decls(c, pg.T, pg.e_chunk, pg.v_chunk)
+                   if sp == "vmem")
+
+    limit = (vmem_bytes(hbm) + vmem_bytes(base)) // 2
+    with pytest.raises(ValueError, match="over budget"):
+        alg.bfs(pg, root, dataclasses.replace(base,
+                                              vmem_limit_bytes=limit))
+    r_vmem = alg.bfs(pg, root, base)
+    r_hbm = alg.bfs(pg, root,
+                    dataclasses.replace(hbm, vmem_limit_bytes=limit))
+    assert_space_equivalent(r_hbm, r_vmem, "beyond-vmem")
+    assert int(r_hbm.stats.hbm_edges) > 0
+    np.testing.assert_array_equal(r_hbm.values, ref.bfs_ref(g, root))
+
+
+# --------------------------------------------------------------------------
+# SPMD: the HBM stream under real shard_map (subprocess: multi-device CPU
+# needs XLA_FLAGS before jax initializes).
+# --------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import algorithms as alg
+    from repro.core import reference as ref
+    from repro.core.engine import EngineConfig
+    from repro.core.graph import CSRGraph, rmat_edges
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("x",))
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    g = CSRGraph.from_edges(n, src, dst, val)
+    pg = alg.prepare(g, T=8)
+    cfg = EngineConfig(f_pop=8, r_pop=8, u_pop=16, max_t2=8,
+                       cap_route_range=8, cap_route_update=32,
+                       cap_rangeq=128, cap_updq=4096, max_rounds=5000,
+                       edge_space="hbm")
+    root = int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+    r_spmd = alg.bfs(pg, root, cfg, mesh=mesh)
+    r_local = alg.bfs(pg, root, cfg)
+    np.testing.assert_array_equal(r_spmd.values, r_local.values)
+    np.testing.assert_array_equal(r_spmd.values, ref.bfs_ref(g, root))
+    assert int(r_spmd.stats.hbm_windows) == int(r_local.stats.hbm_windows)
+    assert int(r_spmd.stats.hbm_edges) == int(r_local.stats.hbm_edges)
+    assert int(r_spmd.stats.hbm_edges) > 0
+    assert float(r_spmd.stats.cycles) == float(r_local.stats.cycles)
+    assert float(r_spmd.stats.energy_pj) == float(r_local.stats.energy_pj)
+    assert int(r_spmd.stats.drops) == 0
+    print("SPMD-HBM-OK")
+""")
+
+
+@pytest.mark.slow
+def test_spmd_hbm_stream_matches_local():
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", SPMD_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "SPMD-HBM-OK" in out.stdout
