@@ -91,11 +91,14 @@ def stats_row(stats, queries=None, qps=None) -> dict:
     return out
 
 
-def perf_cols(stats, cfg: EngineConfig, T: int = None) -> dict:
+def perf_cols(stats, cfg: EngineConfig, T: int = None, trace=None) -> dict:
     """Modeled time / throughput / energy columns for a figure row.
 
     Takes the run's ``cfg`` so overridden `PerfParams` (clock, leak, op
     costs) price the derived columns exactly like the accumulator did.
+    ``trace`` (a TraceBuf from a ``cfg.trace`` run) adds the flight
+    recorder's ``util_mean`` / ``work_cov`` columns — additive, so
+    untraced rows keep their historical shape.
     """
     from repro.perf import derived_metrics
-    return derived_metrics(stats, cfg.perf, T)
+    return derived_metrics(stats, cfg.perf, T, trace=trace)

@@ -1,0 +1,117 @@
+"""Utilization-over-time figure from the flight recorder (PR9).
+
+Beyond the run-level ``Stats`` every earlier figure aggregates, the
+recorder (``repro.trace``, DESIGN.md "Tracing & observability") keeps the
+per-round series — so this bench plots WHERE the cycles go over a
+traversal's lifetime: per-round mean tile utilization (busy cycles over
+the round's critical-path envelope) and the work-imbalance CoV, swept
+across NoC fabric x placement x TSU policy.
+
+Per combo the workload runs twice, trace off then trace on, and the ``ok``
+column asserts the recorder's non-perturbation contract on the live
+configs: values AND every ``Stats`` field bit-identical, and the trace's
+cycle timeline reconciling bitwise with ``Stats.cycles`` (the trace-off
+run is the committed-baseline behavior; the trace must be a pure read).
+
+Row columns: identity (noc / placement / policy), the usual counters and
+modeled cycles/energy, the recorder's additive ``util_mean`` /
+``work_cov``, per-phase utilization (ramp / steady / drain), and
+``util_series`` — the per-round utilization bucket-averaged to at most
+``series_points`` points (the figure's y values; ``series_rounds`` rounds
+per bucket).
+
+Rows feed ``benchmarks/smoke.py`` (BENCH json + the standalone
+``BENCH_FIG14.json`` artifact) at T=4 / scale=6 / 2x1 dies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.trace.export import (reconcile_cycles, summarize, trace_arrays,
+                                utilization)
+from benchmarks.common import engine_cfg, perf_cols, pick_root, rmat_graph
+
+# (noc, placement, policy): mesh vs the multi-die hier fabric, balanced vs
+# hub-concentrating vs die-local placement, traffic-aware vs static TSU.
+COMBOS = (
+    ("mesh", "low_order", "traffic"),
+    ("mesh", "high_order", "traffic"),
+    ("mesh", "low_order", "static"),
+    ("hier", "low_order", "traffic"),
+    ("hier", "low_order_dielocal", "traffic"),
+    ("hier", "low_order_dielocal", "static"),
+)
+
+
+def _stats_identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+def _series(util: np.ndarray, points: int) -> tuple[list, int]:
+    """Bucket-average a per-round series to at most ``points`` values."""
+    n = len(util)
+    if n == 0:
+        return [], 0
+    per = max(1, -(-n // points))  # ceil
+    vals = [round(float(util[i:i + per].mean()), 4)
+            for i in range(0, n, per)]
+    return vals, per
+
+
+def run(scale: int = 10, T: int = 16, ndies=(2, 2), combos=COMBOS,
+        trace_rounds: int = 4096, series_points: int = 24) -> list[dict]:
+    g = rmat_graph(scale)
+    root = pick_root(g)
+    rows = []
+    for noc, placement, policy in combos:
+        hier = noc == "hier"
+        dies = ndies if placement.endswith("_dielocal") else None
+        pg = alg.prepare(g, T, scheme=placement, dies=dies)
+        cfg0 = engine_cfg(T=T, noc=noc, policy=policy,
+                          ndies_y=ndies[0] if hier else 1,
+                          ndies_x=ndies[1] if hier else 1)
+        cfg1 = dataclasses.replace(cfg0, trace=True,
+                                   trace_rounds=trace_rounds)
+        base = alg.bfs(pg, root, cfg0)       # the untraced (baseline) run
+        res = alg.bfs(pg, root, cfg1)        # same run, recorder on
+        rec = reconcile_cycles(res.trace,
+                               float(np.asarray(res.stats.cycles)))
+        ok = (bool(np.array_equal(base.values, res.values))
+              and _stats_identical(base.stats, res.stats)
+              and rec["exact"])
+        s = res.stats
+        p = perf_cols(s, cfg1, T, trace=res.trace)
+        summ = summarize(res.trace)
+        util = utilization(trace_arrays(res.trace))
+        series, per = _series(util, series_points)
+        row = {
+            "bench": "fig14", "app": "bfs", "noc": noc,
+            "placement": placement, "policy": policy,
+            "ndies": f"{ndies[0]}x{ndies[1]}" if hier else "1x1",
+            "rounds": int(s.rounds),
+            "msgs": int(np.asarray(s.msgs).sum()),
+            "spills": int(np.asarray(s.spills).sum()),
+            "drops": int(s.drops),
+            "cycles": p["cycles"], "energy_pj": p["energy_pj"],
+            "gteps": p["gteps"],
+            "util_mean": p["util_mean"], "work_cov": p["work_cov"],
+            "util_min": round(summ["util_min"], 4),
+            "util_max": round(summ["util_max"], 4),
+            "crit_tile_mode": summ["crit_tile_mode"],
+            "util_series": series, "series_rounds": per,
+            "ok": ok,
+        }
+        for ph in summ["phases"]:
+            row[f"util_{ph['phase']}"] = round(ph["util_mean"], 4)
+            row[f"cov_{ph['phase']}"] = round(ph["work_cov"], 4)
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))

@@ -17,8 +17,9 @@ def main() -> None:
 
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
                             fig8_noc, fig10_energy, fig11_backend,
-                            fig12_serving, fig13_memspace, kern_micro,
-                            lm_micro, roofline, taskgraphs, work_efficiency)
+                            fig12_serving, fig13_memspace,
+                            fig14_utilization, kern_micro, lm_micro,
+                            roofline, taskgraphs, work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -65,6 +66,13 @@ def main() -> None:
         scale=8 if fast else 10, T=8 if fast else 16,
         apps=("bfs", "spmv") if fast else fig13_memspace.APPS,
         pallas=not fast))
+    print("# fig14: utilization over time — flight-recorder traces across "
+          "noc x placement x policy (per-round util / work CoV)")
+    _emit(fig14_utilization.run(
+        scale=8 if fast else 10, T=8 if fast else 16,
+        ndies=(2, 2),
+        combos=fig14_utilization.COMBOS[:2] if fast
+        else fig14_utilization.COMBOS))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

@@ -9,16 +9,19 @@ exist, match bit-for-bit and run one launch per channel leg, the
 ``launches_per_round`` column), the kern_micro launch-overhead rows
 (measured launch counts; fused variants must report exactly 1), and the fig12
 serving bench (batched query lanes: static + continuous batching +
-a pallas-backend batch, queries/sec rows), and the fig13 memory-space
+a pallas-backend batch, queries/sec rows), the fig13 memory-space
 ladder (VMEM-resident vs HBM-streamed edge shards: bit-identical values,
 per-space pricing, the config-time rejection of an over-budget all-VMEM
-layout) at T=4 / scale=6,
+layout), and the fig14 utilization rows (flight-recorder traces across
+noc x placement x policy; every row asserts trace-on is bit-identical to
+the untraced run and carries ``util_mean > 0``) at T=4 / scale=6,
 asserts the no-drop invariant and the reference checks on every row, and
 writes the
 rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
-fig11 / fig12 / fig13 rows are additionally written standalone as
-``BENCH_FIG11.json`` / ``BENCH_FIG12.json`` / ``BENCH_FIG13.json`` (all
-uploaded as CI artifacts).
+fig11 / fig12 / fig13 / fig14 rows are additionally written standalone as
+``BENCH_FIG11.json`` / ... / ``BENCH_FIG14.json``, plus one example
+flight-recorder trace (``smoke.perfetto.json``, loadable at
+ui.perfetto.dev) — all uploaded as CI artifacts.
 
 The per-space Stats columns (``hbm_windows`` / ``hbm_edges``) follow the
 additive-keys convention: they may appear ONLY on ``space == "hbm"``
@@ -50,7 +53,7 @@ DEFAULT_BASELINE = os.path.join(HERE, "BENCH_PR3.baseline.json")
 # Columns that identify a row (everything string-valued is identity; these
 # are listed explicitly so a new string column cannot silently split keys).
 ID_COLS = ("bench", "rung", "app", "mode", "noc", "backend", "placement",
-           "ndies", "arrival", "kernel", "space")
+           "ndies", "arrival", "kernel", "space", "policy")
 
 
 def row_key(row: dict) -> tuple:
@@ -93,6 +96,12 @@ def main() -> int:
     ap.add_argument("--fig13-out", default="BENCH_FIG13.json",
                     help="standalone copy of the fig13 memory-space rows; "
                          "'none' to skip")
+    ap.add_argument("--fig14-out", default="BENCH_FIG14.json",
+                    help="standalone copy of the fig14 utilization rows; "
+                         "'none' to skip")
+    ap.add_argument("--perfetto-out", default="smoke.perfetto.json",
+                    help="example flight-recorder Perfetto export "
+                         "(CI artifact); 'none' to skip")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="baseline json to diff rounds against; 'none' "
                          "to skip")
@@ -102,8 +111,8 @@ def main() -> int:
 
     t0 = time.time()
     from benchmarks import (fig5_ablation, fig8_noc, fig11_backend,
-                            fig12_serving, fig13_memspace, kern_micro,
-                            taskgraphs)
+                            fig12_serving, fig13_memspace,
+                            fig14_utilization, kern_micro, taskgraphs)
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
@@ -137,6 +146,12 @@ def main() -> int:
     fig13 = fig13_memspace.run(scale=args.scale, T=args.tiles,
                                apps=("bfs", "spmv"))
     rows += fig13
+    # the fig14 utilization rows: flight-recorder traces across
+    # noc x placement x policy — each row internally asserts trace-on is
+    # bit-identical to the untraced run (the `ok` column)
+    fig14 = fig14_utilization.run(scale=args.scale, T=args.tiles,
+                                  ndies=(2, 1))
+    rows += fig14
 
     bad = []
     if not any(r.get("backend") == "pallas" for r in rows):
@@ -157,6 +172,18 @@ def main() -> int:
                for r in rows):
         bad.append("fig13 must emit an ok space=hbm row with "
                    "hbm_windows > 0")
+    # every traced fig14 row must record real utilization (a 0 means the
+    # recorder captured nothing — the ring/exporter wiring broke)
+    bad += [r for r in rows
+            if r.get("bench") == "fig14" and r.get("util_mean", 0) <= 0]
+    if not any(r.get("bench") == "fig14" for r in rows):
+        bad.append("smoke must emit fig14 utilization rows")
+    # additive-keys stability: the recorder's columns may appear ONLY on
+    # traced (fig14) rows — a leak onto any other row would perturb the
+    # committed pre-trace baseline rows byte-for-byte
+    bad += [r for r in rows
+            if r.get("bench") != "fig14"
+            and ("util_mean" in r or "work_cov" in r)]
     # additive-keys stability: the per-space counters may appear ONLY on
     # hbm rows — a leak onto any other row would perturb the committed
     # pre-memspace baseline rows byte-for-byte
@@ -174,6 +201,32 @@ def main() -> int:
     if args.fig13_out != "none":
         with open(args.fig13_out, "w") as f:
             json.dump(fig13, f, indent=1)
+    if args.fig14_out != "none":
+        with open(args.fig14_out, "w") as f:
+            json.dump(fig14, f, indent=1)
+    if args.perfetto_out != "none":
+        # one loadable example trace (ui.perfetto.dev) as a CI artifact
+        import dataclasses as _dc
+
+        import numpy as _np
+
+        from benchmarks.common import engine_cfg as _ecfg
+        from benchmarks.common import pick_root as _root
+        from benchmarks.common import rmat_graph as _rmat
+        from repro.core import algorithms as _alg
+        from repro.trace import write_perfetto
+
+        _g = _rmat(args.scale)
+        _pg = _alg.prepare(_g, args.tiles)
+        _cfg = _dc.replace(_ecfg(T=args.tiles, noc="mesh"), trace=True,
+                           trace_rounds=4096)
+        _res = _alg.bfs(_pg, _root(_g), _cfg)
+        _doc = write_perfetto(_res.trace, args.perfetto_out,
+                              meta={"bench": "smoke", "app": "bfs",
+                                    "noc": "mesh", "scale": args.scale,
+                                    "tiles": args.tiles})
+        print(f"wrote {args.perfetto_out}: "
+              f"{len(_doc['traceEvents'])} events")
     print(f"wrote {len(rows)} rows to {args.out} in {time.time()-t0:.1f}s")
     if bad:
         print(f"FAILED rows: {bad}")

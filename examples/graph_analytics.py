@@ -59,6 +59,12 @@ def main():
                     help="also serve N batched multi-source BFS/SSSP "
                          "queries (the repro.serve query lanes) and print "
                          "a queries/sec line")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="run the BFS row with the flight recorder on "
+                         "(repro.trace), write the Chrome/Perfetto trace "
+                         "JSON to PATH and print the utilization summary "
+                         "(results stay bit-identical; see DESIGN.md "
+                         "'Tracing & observability')")
     args = ap.parse_args()
     wl = PRESETS[args.preset] if args.preset else None
     scale = args.scale if args.scale is not None else \
@@ -129,6 +135,34 @@ def main():
                   f"{'OK' if ok else 'FAIL'}")
             assert ok, app
             assert int(s.drops) == 0
+
+    # Flight recorder (--trace): the async BFS again with the per-round
+    # trace on — results stay bit-identical (asserted), and the run's
+    # timeline lands in a Chrome/Perfetto JSON (ui.perfetto.dev) plus the
+    # utilization / work-imbalance / queue-depth table of repro.trace.
+    if args.trace:
+        import dataclasses
+        from repro.trace import (format_summary, reconcile_cycles,
+                                 summarize, write_perfetto)
+        pg_t = alg.prepare(g, tiles, scheme=placement, dies=dies)
+        cfg0 = EngineConfig(mode="async")
+        cfg_t = dataclasses.replace(cfg0, trace=True, trace_rounds=4096)
+        base = alg.bfs(pg_t, root, cfg0)
+        res = alg.bfs(pg_t, root, cfg_t)
+        assert (res.values == base.values).all() \
+            and float(res.stats.cycles) == float(base.stats.cycles), \
+            "the flight recorder must not perturb the run"
+        rec = reconcile_cycles(res.trace,
+                               float(np.asarray(res.stats.cycles)))
+        doc = write_perfetto(res.trace, args.trace,
+                             meta={"app": "bfs", "noc": noc,
+                                   "placement": placement,
+                                   "tiles": tiles, "scale": scale})
+        print(f"\nflight recorder: bfs traced "
+              f"{int(res.stats.rounds)} rounds -> {args.trace} "
+              f"({len(doc['traceEvents'])} events), cycle reconcile "
+              f"exact={rec['exact']}")
+        print(format_summary(summarize(res.trace)))
 
     # NoC topology ablation: same BFS, five fabrics (the hier rows run the
     # multi-die composition with and without die-local placement — the

@@ -32,6 +32,7 @@ from repro.core.engine import (BFS, PAGERANK, SPMV, SSSP, WCC, AlgSpec,
 from repro.core.graph import CSRGraph, PartitionedGraph, partition_graph
 from repro.core.program import (TRIANGLES, as_program, kcore_program,
                                 sized_cfg)
+from repro.trace.buffer import zero_trace
 
 
 # --------------------------------------------------------------------------
@@ -101,8 +102,9 @@ def _local_call(prog, cfg: EngineConfig, T: int, e_chunk: int,
                 v_chunk: int, shard: GraphShard, value, frontier, acc):
     comm = LocalComm(T)
     st = init_state(comm, cfg, v_chunk, value, frontier, prog, acc)
-    st, stats = run_engine(comm, cfg, prog, shard, st, e_chunk, v_chunk)
-    return st.value, st.acc, stats
+    st, stats, trace = run_engine(comm, cfg, prog, shard, st, e_chunk,
+                                  v_chunk)
+    return st.value, st.acc, stats, trace
 
 
 def local_engine_call(pg: PartitionedGraph, alg, cfg: EngineConfig,
@@ -136,14 +138,19 @@ def spmd_engine_call(pg: PartitionedGraph, alg, cfg: EngineConfig,
         shard = GraphShard(ptr_start[0], deg[0], edge_dst[0], edge_val[0])
         st = init_state(comm, cfg, pg.v_chunk, value[0], frontier[0],
                         prog, acc[0])
-        st, stats = run_engine(comm, cfg, prog, shard, st,
-                               pg.e_chunk, pg.v_chunk)
-        return st.value[None], st.acc[None], stats
+        st, stats, trace = run_engine(comm, cfg, prog, shard, st,
+                                      pg.e_chunk, pg.v_chunk)
+        return st.value[None], st.acc[None], stats, trace
 
+    # the recorder's ring holds only global (replicated) series, so its
+    # out_spec is P() everywhere, exactly like Stats (None when trace off)
+    trace_spec = jax.tree.map(lambda _: P(), zero_trace(cfg, T, prog)) \
+        if cfg.trace else None
     fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(spec2,) * 7,
-        out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero())))
+        out_specs=(spec2, spec2, jax.tree.map(lambda _: P(), Stats.zero()),
+                   trace_spec))
     args = [jax.device_put(a, NamedSharding(mesh, spec2)) for a in
             (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val, value,
              frontier, acc)]
@@ -159,6 +166,7 @@ class Result:
     values: np.ndarray  # (V,) in original vertex order
     stats: Stats
     epochs: int = 1
+    trace: object = None  # TraceBuf when cfg.trace, else None
 
 
 def _call(pg, alg, cfg, value, frontier, mesh=None, axis="x", acc=None):
@@ -170,35 +178,36 @@ def _call(pg, alg, cfg, value, frontier, mesh=None, axis="x", acc=None):
 def bfs(pg: PartitionedGraph, root: int, cfg: EngineConfig = EngineConfig(),
         mesh=None) -> Result:
     value, frontier = init_min_state(pg, [root])
-    v, _, stats = _call(pg, BFS, cfg, value, frontier, mesh)
+    v, _, stats, trace = _call(pg, BFS, cfg, value, frontier, mesh)
     out = to_original(pg, v).astype(np.float64)
     out[out >= np.float32(np.finfo(np.float32).max)] = np.inf
-    return Result(out, stats)
+    return Result(out, stats, trace=trace)
 
 
 def sssp(pg: PartitionedGraph, root: int, cfg: EngineConfig = EngineConfig(),
          mesh=None) -> Result:
     value, frontier = init_min_state(pg, [root])
-    v, _, stats = _call(pg, SSSP, cfg, value, frontier, mesh)
+    v, _, stats, trace = _call(pg, SSSP, cfg, value, frontier, mesh)
     out = to_original(pg, v).astype(np.float64)
     out[out >= np.float32(np.finfo(np.float32).max)] = np.inf
-    return Result(out, stats)
+    return Result(out, stats, trace=trace)
 
 
 def wcc(pg: PartitionedGraph, cfg: EngineConfig = EngineConfig(),
         mesh=None) -> Result:
     """Label propagation to the min original id (graph must be symmetric)."""
     value, frontier = init_wcc_state(pg)
-    v, _, stats = _call(pg, WCC, cfg, value, frontier, mesh)
-    return Result(to_original(pg, v).astype(np.int64), stats)
+    v, _, stats, trace = _call(pg, WCC, cfg, value, frontier, mesh)
+    return Result(to_original(pg, v).astype(np.int64), stats, trace=trace)
 
 
 def spmv(pg: PartitionedGraph, x: np.ndarray,
          cfg: EngineConfig = EngineConfig(), mesh=None) -> Result:
     """Push-mode y[dst] += val * x[src] — one engine epoch."""
     value, frontier = init_add_state(pg, x)
-    _, acc, stats = _call(pg, SPMV, cfg, value, frontier, mesh)
-    return Result(to_original(pg, acc).astype(np.float64), stats)
+    _, acc, stats, trace = _call(pg, SPMV, cfg, value, frontier, mesh)
+    return Result(to_original(pg, acc).astype(np.float64), stats,
+                  trace=trace)
 
 
 def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
@@ -218,10 +227,11 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
     # always safe to accumulate (also the iters == 0 result).
     total = zero_stats(cfg, pg.T, PAGERANK)
     epochs = 0
+    trace = None  # the LAST epoch's ring (each epoch restarts the engine)
     for _ in range(iters):
         frontier = jnp.asarray(real & (deg > 0))
-        _, acc, stats = _call(pg, PAGERANK, cfg, jnp.asarray(rank), frontier,
-                              mesh)
+        _, acc, stats, trace = _call(pg, PAGERANK, cfg, jnp.asarray(rank),
+                                     frontier, mesh)
         acc = np.asarray(acc)
         dangling = rank[real & (deg == 0)].sum()
         new_rank = np.where(
@@ -233,7 +243,8 @@ def pagerank(pg: PartitionedGraph, damping: float = 0.85, iters: int = 20,
         epochs += 1
         if tol and diff < tol:
             break
-    return Result(to_original(pg, rank).astype(np.float64), total, epochs)
+    return Result(to_original(pg, rank).astype(np.float64), total, epochs,
+                  trace=trace)
 
 
 def kcore(pg: PartitionedGraph, k: int, cfg: EngineConfig = EngineConfig(),
@@ -246,10 +257,10 @@ def kcore(pg: PartitionedGraph, k: int, cfg: EngineConfig = EngineConfig(),
     3-channel shape as BFS with a different T3.
     """
     value, frontier, acc = init_kcore_state(pg, k)
-    _, a, stats = _call(pg, kcore_program(int(k)), cfg, value, frontier,
-                        mesh, acc=acc)
+    _, a, stats, trace = _call(pg, kcore_program(int(k)), cfg, value,
+                               frontier, mesh, acc=acc)
     member = (to_original(pg, a) == 0.0).astype(np.int64)
-    return Result(member, stats)
+    return Result(member, stats, trace=trace)
 
 
 def prepare_triangles(g: CSRGraph, T: int,
@@ -295,8 +306,8 @@ def triangles(pg: PartitionedGraph, cfg: EngineConfig = EngineConfig(),
     deg = np.asarray(pg.deg)
     value = jnp.zeros((pg.T, pg.v_chunk), jnp.float32)
     frontier = jnp.asarray(real & (deg > 0))
-    _, a, stats = _call(pg, TRIANGLES, cfg, value, frontier, mesh)
-    return Result(to_original(pg, a).astype(np.int64), stats)
+    _, a, stats, trace = _call(pg, TRIANGLES, cfg, value, frontier, mesh)
+    return Result(to_original(pg, a).astype(np.int64), stats, trace=trace)
 
 
 def _acc_stats(a: Stats, b: Stats) -> Stats:

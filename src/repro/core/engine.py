@@ -96,8 +96,10 @@ from repro.kernels.engine import (fifo_turn, fused_leg_call, queue_append,
                                   queue_push_pop, tally)
 from repro.mem import resolve_window
 from repro.noc import make_network
+from repro.noc.topology import N_LINK_CLASSES
 from repro.perf import (PerfParams, link_cost_vectors, round_energy_pj,
                         tile_compute_cycles)
+from repro.trace.buffer import record_round, zero_trace
 
 
 # --------------------------------------------------------------------------
@@ -179,6 +181,18 @@ class EngineConfig:
     hier_base: str = "mesh"  # intra-die wiring (noc="hier")
     # --- cycle/energy cost model (repro.perf) ---
     perf: PerfParams = PerfParams()
+    # --- flight recorder (repro.trace) ---
+    # ``trace=True`` carries a TraceBuf ring through the round loop,
+    # recording per-round series (per-channel msgs/spills/queue depth,
+    # per-tile busy cycles + critical-path tile, per-link-class flits,
+    # TSU budget grants, HBM windows, frontier/pending) every
+    # ``trace_every``-th round into a bounded ``trace_rounds``-slot ring
+    # (oldest rounds overwritten).  Contract: trace=False is
+    # byte-identical to a build without the recorder; trace=True never
+    # perturbs values or Stats (tests/test_trace.py).
+    trace: bool = False
+    trace_every: int = 1
+    trace_rounds: int = 512
 
     def min_caps(self, T: int) -> tuple[int, int]:
         """Worst-case per-round queue inflow for the *classic* program
@@ -406,11 +420,14 @@ def _set_queue(st: EngineState, i: int, q: Queue) -> EngineState:
 
 def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
                v_chunk: int, shard: GraphShard):
-    """Build the per-round function
-    ``(state, stats, kahan_comp) -> (state, stats, kahan_comp, pending)``
-    where ``kahan_comp`` is the ``(cycles, energy)`` f32 compensation pair
-    of the perf model's in-loop summation (threaded through the
-    ``while_loop`` carry, never surfaced).
+    """Build the per-round function ``(state, stats, kahan_comp, tbuf) ->
+    (state, stats, kahan_comp, tbuf, pending)`` where ``kahan_comp`` is
+    the ``(cycles, energy)`` f32 compensation pair of the perf model's
+    in-loop summation (threaded through the ``while_loop`` carry, never
+    surfaced) and ``tbuf`` is the flight recorder's ring
+    (:mod:`repro.trace`) when ``cfg.trace`` — an empty pytree ``()``
+    otherwise, so the trace-off carry is byte-identical to a build
+    without the recorder.
 
     One generic ``queue -> budget -> transform -> net.route -> handler ->
     spill`` leg per program channel, with the destination decoded from the
@@ -473,6 +490,14 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
     plimit = net.pressure_limit(cfg, caps)
     pp = cfg.perf
     t_hop, e_hop = link_cost_vectors(pp, net)
+    tracing = cfg.trace
+    if tracing:
+        # static (C, num_links) one-hot splitting per-link flits by cost
+        # class for the recorder's per-class series
+        _cls = np.asarray(net.link_classes)
+        cls_onehot = jnp.asarray(
+            (_cls[None, :] == np.arange(N_LINK_CLASSES)[:, None])
+            .astype(np.int32))
 
     def requeue(st, i, sp, spv, cx):
         """Spill re-queue into channel i's local queue.  Inside a fused leg
@@ -586,7 +611,8 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
         t = total + y
         return t, (t - total) - y
 
-    def rnd(st: EngineState, stats: Stats, kcomp):
+    def rnd(st: EngineState, stats: Stats, kcomp, tbuf=()):
+        st0, round_ix = st, stats.rounds  # pre-round views (trace only)
         # The round body is traced exactly once per compile, so the
         # pallas_call dispatches recorded while tracing the stages below
         # ARE this round's launch count (repro.kernels.engine.launches) —
@@ -719,7 +745,39 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             hbm_windows=stats.hbm_windows + hw_g,
             hbm_edges=stats.hbm_edges + he_g,
         )
-        return st, stats, (c_cyc, c_en), glob(pending)
+        if tracing:
+            # Flight recorder (repro.trace): pure reads of telemetry the
+            # round already computed, plus trace-only reductions — nothing
+            # here feeds back into state, values or Stats (the invariance
+            # contract).  All recorded values are global/replicated, like
+            # Stats, so shard_map carries an identical ring per device.
+            comp_all = comm.to_global(comm.all_gather(comp))  # (T,) f32
+            occ = comm.run(
+                lambda me, s: jnp.stack([q.count for q in s.queues]), st)
+            # the TSU's source grant, recomputed from the same pre-round
+            # state stage_first arbitrated on (same integer math)
+            src_grant = comm.run(
+                lambda me, s: _budgets(cfg, prog, qcaps, pops, s,
+                                       plimit)[0], st0)
+            tbuf = record_round(tbuf, dict(
+                cyc=cyc_round,
+                cyc_total=cycles_acc,
+                tile_busy=comp_all,
+                crit_tile=jnp.argmax(comp_all).astype(jnp.int32),
+                msgs=msgs_vec,
+                spills=spills_vec,
+                qdepth=glob(comm.psum(occ)),
+                qdepth_max=glob(comm.pmax(occ)),
+                chan_budget=glob(comm.psum(dyn_pops)),
+                src_budget=glob(comm.psum(src_grant)),
+                link_cls=(cls_onehot * link_g[None, :]).sum(axis=1),
+                launches=jnp.int32(launch_tally.n),
+                hbm_windows=hw_g,
+                frontier=glob(comm.psum(comm.run(
+                    lambda me, s: s.frontier.sum(dtype=jnp.int32), st))),
+                pending=glob(pending),
+            ), round_ix, cfg.trace_every)
+        return st, stats, (c_cyc, c_en), tbuf, glob(pending)
 
     return rnd
 
@@ -765,27 +823,31 @@ def run_engine(comm, cfg: EngineConfig, alg, shard: GraphShard,
     """Run rounds until the global idle signal fires (or max_rounds).
 
     ``alg`` is an AlgSpec (compiled via ``classic_program``) or any
-    :class:`repro.core.program.Program`.
+    :class:`repro.core.program.Program`.  Returns ``(state, stats,
+    trace)`` — ``trace`` is the captured :class:`repro.trace.TraceBuf`
+    ring when ``cfg.trace``, ``None`` otherwise (the trace-off carry is
+    an empty pytree: byte-identical to a build without the recorder).
     """
     prog = as_program(alg)
     prog.validate(cfg, comm.size, e_chunk, v_chunk)
     net = make_network(cfg, comm.size)
     rnd = make_round(comm, net, cfg, prog, e_chunk, v_chunk, shard)
+    tbuf0 = zero_trace(cfg, comm.size, prog) if cfg.trace else ()
 
     def cond(carry):
-        _, _, _, pending, r = carry
+        _, _, _, _, pending, r = carry
         return (pending > 0) & (r < cfg.max_rounds)
 
     def body(carry):
-        st, stats, kcomp, _, r = carry
-        st, stats, kcomp, pending = rnd(st, stats, kcomp)
-        return st, stats, kcomp, pending, r + 1
+        st, stats, kcomp, tbuf, _, r = carry
+        st, stats, kcomp, tbuf, pending = rnd(st, stats, kcomp, tbuf)
+        return st, stats, kcomp, tbuf, pending, r + 1
 
     pending0 = comm.to_global(comm.psum(comm.run(_pending, st)))
     zf = jnp.zeros((), jnp.float32)
-    st, stats, _, _, _ = jax.lax.while_loop(
+    st, stats, _, tbuf, _, _ = jax.lax.while_loop(
         cond, body,
         (st, Stats.zero(net.num_links, net.max_hops, len(prog.channels),
                         net.max_die_crossings),
-         (zf, zf), pending0, jnp.int32(0)))
-    return st, stats
+         (zf, zf), tbuf0, pending0, jnp.int32(0)))
+    return st, stats, (tbuf if cfg.trace else None)

@@ -267,7 +267,8 @@ def serving_metrics(queries: int, cycles: float, energy_pj: float,
     }
 
 
-def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
+def derived_metrics(stats, params: PerfParams = None, T: int = None,
+                    trace=None) -> dict:
     """Time / throughput / energy columns from an accumulated Stats.
 
     ``params`` must be the run's ``cfg.perf`` whenever it was overridden —
@@ -278,6 +279,10 @@ def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
     ``T`` given, the leakage share of the total (``leak_pj`` /
     ``leak_frac``) is split out using the same :func:`leak_pj` formula the
     accumulator priced it with.
+
+    ``trace`` (a captured :class:`repro.trace.TraceBuf`) adds the flight
+    recorder's ``util_mean`` / ``work_cov`` columns — ADDITIVE, like the
+    HBM split: rows from untraced runs keep their exact historical shape.
     """
     params = params or PerfParams()
     cycles = float(np.asarray(stats.cycles))
@@ -306,4 +311,7 @@ def derived_metrics(stats, params: PerfParams = None, T: int = None) -> dict:
         if edges > 0:
             out["pj_per_edge_hbm"] = round(hbm_pj / edges, 3)
             out["pj_per_edge_sram"] = round((energy - hbm_pj) / edges, 3)
+    if trace is not None:
+        from repro.trace.export import trace_metrics
+        out.update(trace_metrics(trace))
     return out

@@ -184,10 +184,18 @@ def _recycle(carry: LaneCarry, lane, value, frontier) -> LaneCarry:
     stats = jax.tree.map(lambda s: s.at[lane].set(jnp.zeros_like(s[lane])),
                          carry.stats)
     kcomp = jax.tree.map(lambda k: k.at[lane].set(0.0), carry.kcomp)
+    # the recycled lane's flight-recorder ring starts over too (cursor 0,
+    # every slot marked empty) so its trace is the fresh query's alone
+    trace = carry.trace
+    if len(trace):  # a lane-led TraceBuf (cfg.trace)
+        trace = jax.tree.map(
+            lambda s: s.at[lane].set(jnp.zeros_like(s[lane])), trace)
+        trace = trace._replace(
+            round_id=trace.round_id.at[lane].set(-1))
     # fresh lane: queues empty, so pending is the frontier population
     pend = frontier.sum(dtype=jnp.int32)
     return carry._replace(
-        st=st, stats=stats, kcomp=kcomp,
+        st=st, stats=stats, kcomp=kcomp, trace=trace,
         pending=carry.pending.at[lane].set(pend),
         done_round=carry.done_round.at[lane].set(-1),
         done_cycle=carry.done_cycle.at[lane].set(0.0),

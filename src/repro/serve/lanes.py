@@ -65,6 +65,7 @@ from repro.core.graph import PartitionedGraph
 from repro.core.program import CLASSIC, as_program
 from repro.noc import make_network
 from repro.perf import leak_pj
+from repro.trace.buffer import zero_trace
 
 
 class LaneCarry(NamedTuple):
@@ -84,6 +85,8 @@ class LaneCarry(NamedTuple):
                            # (-1 = still running / never finished)
     done_cycle: jax.Array  # (B,) f32 — batch clock at lane completion
     halt: jax.Array       # () bool — segment stop flag (continuous mode)
+    trace: tuple = ()     # lane-led (B, ...) TraceBuf when cfg.trace,
+                          # else the empty pytree (no extra carry leaves)
 
 
 def lane_state(comm, cfg: EngineConfig, v_chunk: int, value, frontier, alg,
@@ -114,13 +117,18 @@ def lane_carry(comm, net, cfg: EngineConfig, prog, st: EngineState
     stats = jax.tree.map(lambda x: jnp.broadcast_to(x, (B,) + x.shape), z)
     zf = jnp.zeros((B,), jnp.float32)
     z0 = jnp.zeros((), jnp.float32)
+    trace = ()
+    if cfg.trace:  # each lane records its own ring, frozen when the lane is
+        tb = zero_trace(cfg, comm.size, prog)
+        trace = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (B,) + x.shape), tb)
     return LaneCarry(
         st=st, stats=stats, kcomp=(zf, zf), pending=pend0,
         rounds=jnp.zeros((), jnp.int32),
         clock=z0, clock_c=z0, energy=z0, energy_c=z0,
         done_round=jnp.where(pend0 > 0, jnp.int32(-1), jnp.int32(0)),
         done_cycle=jnp.zeros((B,), jnp.float32),
-        halt=jnp.zeros((), bool))
+        halt=jnp.zeros((), bool), trace=trace)
 
 
 def lane_loop(comm, net, cfg: EngineConfig, prog, e_chunk: int, v_chunk: int,
@@ -153,10 +161,12 @@ def lane_loop(comm, net, cfg: EngineConfig, prog, e_chunk: int, v_chunk: int,
 
     def body(c: LaneCarry):
         active = c.pending > 0
-        st2, stats2, kcomp2, pend2 = vrnd(c.st, c.stats, c.kcomp)
+        st2, stats2, kcomp2, tbuf2, pend2 = vrnd(c.st, c.stats, c.kcomp,
+                                                 c.trace)
         st = lane_select(active, c.st, st2)
         stats = lane_select(active, c.stats, stats2)
         kcomp = lane_select(active, c.kcomp, kcomp2)
+        trace = lane_select(active, c.trace, tbuf2)
         pending = jnp.where(active, pend2, c.pending)
         rounds = c.rounds + 1
         # batch clock: realized per-lane increments (0 for frozen lanes);
@@ -175,7 +185,8 @@ def lane_loop(comm, net, cfg: EngineConfig, prog, e_chunk: int, v_chunk: int,
         done_cycle = jnp.where(newly, clock, c.done_cycle)
         halt = newly.any() if stop_on_finish else c.halt
         return LaneCarry(st, stats, kcomp, pending, rounds, clock, clock_c,
-                         energy, energy_c, done_round, done_cycle, halt)
+                         energy, energy_c, done_round, done_cycle, halt,
+                         trace)
 
     return jax.lax.while_loop(cond, body, carry)
 
@@ -219,7 +230,8 @@ def spmd_lanes_call(pg: PartitionedGraph, prog, cfg: EngineConfig, value,
 
     ``value``/``frontier``/``acc``: ``(B, T, v_chunk)``.  Returns
     ``(values (B, T, v_chunk), stats lane-led, rounds, clock, energy,
-    done_round, done_cycle)``.
+    done_round, done_cycle, trace)`` — ``trace`` is the lane-led
+    :class:`repro.trace.TraceBuf` when ``cfg.trace``, else ``None``.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -241,13 +253,16 @@ def spmd_lanes_call(pg: PartitionedGraph, prog, cfg: EngineConfig, value,
         out = lane_loop(comm, net, cfg, prog, pg.e_chunk, pg.v_chunk, shard,
                         carry)
         return (out.st.value[:, None], out.stats, out.rounds, out.clock,
-                out.energy, out.done_round, out.done_cycle)
+                out.energy, out.done_round, out.done_cycle, out.trace)
 
     stats_spec = jax.tree.map(lambda _: P(), Stats.zero())
+    # lane-led trace rings hold only globals — replicated, like Stats
+    trace_spec = jax.tree.map(lambda _: P(), zero_trace(cfg, T, prog)) \
+        if cfg.trace else ()
     fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(spec2,) * 4 + (spec3,) * 3,
-        out_specs=(spec3, stats_spec, P(), P(), P(), P(), P()))
+        out_specs=(spec3, stats_spec, P(), P(), P(), P(), P(), trace_spec))
     args = [jax.device_put(a, NamedSharding(mesh, spec2)) for a in
             (pg.ptr_start, pg.deg, pg.edge_dst, pg.edge_val)]
     args += [jax.device_put(a, NamedSharding(mesh, spec3)) for a in
@@ -302,6 +317,7 @@ class BatchResult:
     done_round: np.ndarray   # (B,) i32
     done_cycle: np.ndarray   # (B,) f32
     sources: np.ndarray      # (B,) the admitted sources (-1 = padding)
+    trace: object = None     # lane-led (B, ...) TraceBuf when cfg.trace
 
     @property
     def seq_rounds(self) -> int:
@@ -336,9 +352,12 @@ def multi_source(pg: PartitionedGraph, app: str, sources,
         vals, stats = out.st.value, out.stats
         rounds, clock, energy = out.rounds, out.clock, out.energy
         done_round, done_cycle = out.done_round, out.done_cycle
+        trace = out.trace if cfg.trace else None
     else:
-        vals, stats, rounds, clock, energy, done_round, done_cycle = \
-            spmd_lanes_call(pg, alg_spec, cfg, value, frontier, mesh)
+        (vals, stats, rounds, clock, energy, done_round, done_cycle,
+         trace) = spmd_lanes_call(pg, alg_spec, cfg, value, frontier, mesh)
+        if not cfg.trace:
+            trace = None
     B = len(sources)
     flat = np.asarray(vals).reshape(B, -1)
     values = flat[:, np.asarray(pg.place)].astype(np.float64)
@@ -348,4 +367,4 @@ def multi_source(pg: PartitionedGraph, app: str, sources,
         total_rounds=int(rounds), batch_cycles=float(clock),
         batch_energy_pj=float(energy),
         done_round=np.asarray(done_round), done_cycle=np.asarray(done_cycle),
-        sources=sources)
+        sources=sources, trace=trace)

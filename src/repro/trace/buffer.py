@@ -1,0 +1,123 @@
+"""The flight recorder's in-loop ring buffer.
+
+:class:`TraceBuf` is a fixed-shape pytree of per-round series carried
+through the engine's ``lax.while_loop`` (and the serving lane vmap) when
+``EngineConfig.trace=True``.  Every leaf is a ``(R, ...)`` ring of
+``R = EngineConfig.trace_rounds`` slots; one slot is written every
+``EngineConfig.trace_every``-th round by :func:`record_round` (a masked
+``dynamic_update_index_in_dim`` — shape-safe inside scan/while/vmap, the
+same discipline as ``zero_stats``/``_acc_stats``).  When the traversal
+outlives the ring, the oldest slots are overwritten: the buffer always
+holds the LAST ``R`` recorded rounds, identifiable by their ``round_id``.
+
+The recording contract (tests/test_trace.py):
+
+* trace-off (``cfg.trace=False``) is byte-identical to a build without the
+  recorder — the carry slot is an empty pytree, no ops are added;
+* trace-on never perturbs values or ``Stats``: every recorded quantity is
+  a *read* of telemetry the round already computed (or an extra pure
+  reduction over it), on both execution backends and both comm backends.
+
+All recorded values are *global* (post ``psum``/``pmax``/``all_gather``),
+so under shard_map every device carries an identical replicated TraceBuf
+(``out_specs=P()``), exactly like ``Stats``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.noc.topology import N_LINK_CLASSES
+
+
+class TraceBuf(NamedTuple):
+    """Per-round series, each a ring of ``R`` slots (leading axis).
+
+    ``cursor`` counts rounds *recorded* (monotonic — ``min(cursor, R)``
+    slots are valid; ``cursor > R`` means the ring wrapped).  ``round_id``
+    holds each slot's engine round index (-1 = never written), so the
+    host can re-order the ring and map slots onto the modeled-cycle
+    timeline via ``cyc_total`` (the post-round ``Stats.cycles`` value:
+    the round occupies ``[cyc_total - cyc, cyc_total]``).
+    """
+
+    cursor: jax.Array       # () i32 — rounds recorded so far
+    round_id: jax.Array     # (R,) i32 — engine round index per slot (-1)
+    cyc: jax.Array          # (R,) f32 — modeled cycles of the round
+    cyc_total: jax.Array    # (R,) f32 — Stats.cycles after the round
+    tile_busy: jax.Array    # (R, T) f32 — per-tile compute cycles
+    crit_tile: jax.Array    # (R,) i32 — the round's critical-path tile
+    msgs: jax.Array         # (R, K) i32 — delivered messages per channel
+    spills: jax.Array       # (R, K) i32 — spill-and-replay per channel
+    qdepth: jax.Array       # (R, K) i32 — total queue occupancy per chan
+    qdepth_max: jax.Array   # (R, K) i32 — max single-tile occupancy
+    chan_budget: jax.Array  # (R, K) i32 — TSU pop budgets granted (sum
+                            # over tiles; the arbiter's decisions)
+    src_budget: jax.Array   # (R,) i32 — frontier-source budget granted
+    link_cls: jax.Array     # (R, C) i32 — flits per link class
+    launches: jax.Array     # (R,) i32 — pallas_call dispatches this round
+    hbm_windows: jax.Array  # (R,) i32 — DMA windows fetched this round
+    frontier: jax.Array     # (R,) i32 — global frontier population
+    pending: jax.Array      # (R,) i32 — global pending work after round
+
+
+# Fields written by record_round (everything except the bookkeeping pair).
+SERIES_FIELDS = tuple(f for f in TraceBuf._fields
+                      if f not in ("cursor", "round_id"))
+
+
+def zero_trace(cfg, T: int, alg=None) -> TraceBuf:
+    """A fresh ring sized for ``cfg`` (R, trace cadence), a ``T``-tile
+    grid and the program's channel count — the TraceBuf analogue of
+    ``zero_stats``.  ``alg`` is an AlgSpec or Program (defaults to the
+    classic 3-task shape's 2 channels)."""
+    from repro.core.program import as_program
+    R = int(cfg.trace_rounds)
+    assert R >= 1, f"trace_rounds={R} must be >= 1"
+    assert int(cfg.trace_every) >= 1, \
+        f"trace_every={cfg.trace_every} must be >= 1"
+    K = len(as_program(alg).channels) if alg is not None else 2
+    C = N_LINK_CLASSES
+    zi = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    return TraceBuf(
+        cursor=zi(),
+        round_id=jnp.full((R,), -1, jnp.int32),
+        cyc=zf(R), cyc_total=zf(R),
+        tile_busy=zf(R, T), crit_tile=zi(R),
+        msgs=zi(R, K), spills=zi(R, K),
+        qdepth=zi(R, K), qdepth_max=zi(R, K),
+        chan_budget=zi(R, K), src_budget=zi(R),
+        link_cls=zi(R, C), launches=zi(R),
+        hbm_windows=zi(R), frontier=zi(R), pending=zi(R),
+    )
+
+
+def record_round(tbuf: TraceBuf, row: dict, round_ix, every: int
+                 ) -> TraceBuf:
+    """Write one round's series values into the ring (masked, in-loop).
+
+    ``row`` maps :data:`SERIES_FIELDS` names to this round's values (each
+    shaped like one slot of the field).  The slot is written — and the
+    cursor advanced — only when ``round_ix % every == 0``; otherwise every
+    buffer passes through untouched (a no-op ``where`` on one slot), so
+    the carry shape stays fixed for ``lax.while_loop``.
+    """
+    R = tbuf.round_id.shape[0]
+    do = (round_ix % jnp.int32(every)) == 0
+    slot = jnp.remainder(tbuf.cursor, jnp.int32(R))
+
+    def wr(buf, v):
+        v = jnp.asarray(v).astype(buf.dtype)
+        old = jax.lax.dynamic_index_in_dim(buf, slot, axis=0,
+                                           keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.where(do, v, old), slot, axis=0)
+
+    assert set(row) == set(SERIES_FIELDS), (
+        f"record_round row keys {sorted(row)} != {sorted(SERIES_FIELDS)}")
+    out = {name: wr(getattr(tbuf, name), v) for name, v in row.items()}
+    out["round_id"] = wr(tbuf.round_id, jnp.asarray(round_ix, jnp.int32))
+    return tbuf._replace(cursor=tbuf.cursor + do.astype(jnp.int32), **out)

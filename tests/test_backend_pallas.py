@@ -236,10 +236,11 @@ def test_per_channel_backend_hint_mixes_backends(g, pg):
     root = int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
     from repro.core.algorithms import init_min_state, local_engine_call
     value, frontier = init_min_state(pg, [root])
-    vx, _, sx = local_engine_call(pg, prog, small_cfg(backend="xla"),
-                                  value, frontier)
-    vm, _, sm = local_engine_call(pg, pinned, small_cfg(backend="pallas"),
-                                  value, frontier)
+    vx, _, sx, _ = local_engine_call(pg, prog, small_cfg(backend="xla"),
+                                     value, frontier)
+    vm, _, sm, _ = local_engine_call(pg, pinned,
+                                     small_cfg(backend="pallas"),
+                                     value, frontier)
     np.testing.assert_array_equal(np.asarray(vx), np.asarray(vm))
     assert_stats_identical(sx, sm, "(mixed backends)")
 

@@ -1,0 +1,349 @@
+"""Flight recorder (repro.trace): the non-perturbation contract and the
+host-side consumers.
+
+The recorder's hard promise: ``cfg.trace=True`` never changes what the
+engine computes — values AND every ``Stats`` field bit-identical to the
+untraced run — on both execution backends (xla / pallas), both comm
+backends (LocalComm in-process, shard_map in the slow subprocess test)
+and through the serving-lane vmap (each lane's ring == its solo run's).
+Plus: ring bounds/cadence semantics, the modeled-cycle timeline
+reconciling bitwise with ``Stats.cycles``, the Perfetto/JSONL exporters,
+and the additive ``util_mean``/``work_cov`` metric columns.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import reference as ref
+from repro.core.engine import EngineConfig
+from repro.core.graph import CSRGraph, rmat_edges
+
+pytestmark = pytest.mark.trace
+
+
+def small_cfg(**kw):
+    base = dict(f_pop=8, r_pop=8, u_pop=16, max_t2=8, cap_route_range=8,
+                cap_route_update=32, cap_rangeq=128, cap_updq=4096,
+                max_rounds=5000)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    return CSRGraph.from_edges(n, src, dst, val)
+
+
+@pytest.fixture(scope="module")
+def pg(graph):
+    return alg.prepare(graph, T=8)
+
+
+def assert_stats_identical(a, b, note=""):
+    for name, x, y in zip(type(a)._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"Stats.{name} {note}")
+
+
+def _root(g):
+    return int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+
+
+# --------------------------------------------------------------------------
+# Non-perturbation: trace-on == trace-off, bit for bit.
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["async", "bsp"])
+def test_trace_invariance_xla(graph, pg, mode):
+    cfg0 = small_cfg(mode=mode)
+    cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+    r0 = alg.bfs(pg, _root(graph), cfg0)
+    r1 = alg.bfs(pg, _root(graph), cfg1)
+    assert r0.trace is None and r1.trace is not None
+    np.testing.assert_array_equal(r0.values, r1.values)
+    assert_stats_identical(r0.stats, r1.stats, f"(mode={mode})")
+    np.testing.assert_array_equal(r0.values, ref.bfs_ref(graph,
+                                                         _root(graph)))
+
+
+@pytest.mark.pallas
+def test_trace_invariance_pallas(graph, pg):
+    cfg0 = small_cfg(backend="pallas")
+    cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+    r0 = alg.bfs(pg, _root(graph), cfg0)
+    r1 = alg.bfs(pg, _root(graph), cfg1)
+    np.testing.assert_array_equal(r0.values, r1.values)
+    assert_stats_identical(r0.stats, r1.stats, "(pallas)")
+    assert int(r1.trace.cursor) == int(r0.stats.rounds)
+    # pallas rounds dispatch kernels; the recorder must see them
+    tr_launch = np.asarray(r1.trace.launches)
+    assert tr_launch[np.asarray(r1.trace.round_id) >= 0].min() > 0
+
+
+def test_trace_invariance_noc_fabrics(graph, pg):
+    for noc in ("mesh", "hier"):
+        kw = dict(noc=noc)
+        if noc == "hier":
+            kw.update(ndies_y=2, ndies_x=2)
+        cfg0 = small_cfg(**kw)
+        cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+        r0 = alg.sssp(pg, _root(graph), cfg0)
+        r1 = alg.sssp(pg, _root(graph), cfg1)
+        np.testing.assert_array_equal(r0.values, r1.values)
+        assert_stats_identical(r0.stats, r1.stats, f"(noc={noc})")
+        # hier routes express DIE-class flits; the per-class split must
+        # sum to the same flit totals the links saw
+        from repro.trace import trace_arrays
+        tr = trace_arrays(r1.trace)
+        assert tr["link_cls"].sum() == int(
+            np.asarray(r0.stats.flits_per_link).sum())
+
+
+# --------------------------------------------------------------------------
+# Ring semantics: cadence, bounds, wrap.
+# --------------------------------------------------------------------------
+
+def test_ring_records_every_round(graph, pg):
+    cfg = small_cfg(trace=True, trace_rounds=256)
+    r = alg.bfs(pg, _root(graph), cfg)
+    n_rounds = int(r.stats.rounds)
+    assert int(r.trace.cursor) == n_rounds
+    rid = np.asarray(r.trace.round_id)
+    got = np.sort(rid[rid >= 0])
+    np.testing.assert_array_equal(got, np.arange(n_rounds))
+
+
+def test_trace_every_cadence(graph, pg):
+    cfg = small_cfg(trace=True, trace_rounds=256, trace_every=2)
+    r = alg.bfs(pg, _root(graph), cfg)
+    rid = np.asarray(r.trace.round_id)
+    got = np.sort(rid[rid >= 0])
+    want = np.arange(0, int(r.stats.rounds), 2)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ring_wrap_keeps_last_rounds(graph, pg):
+    R = 4
+    cfg = small_cfg(trace=True, trace_rounds=R)
+    r = alg.bfs(pg, _root(graph), cfg)
+    n_rounds = int(r.stats.rounds)
+    assert n_rounds > R, "test graph must outlive the tiny ring"
+    assert int(r.trace.cursor) == n_rounds  # counts recorded, not slots
+    from repro.trace import trace_arrays
+    tr = trace_arrays(r.trace)
+    assert tr["n_recorded"] == R and tr["n_seen"] == n_rounds
+    # the ring holds exactly the LAST R rounds, in time order
+    np.testing.assert_array_equal(tr["round_id"],
+                                  np.arange(n_rounds - R, n_rounds))
+
+
+def test_trace_shapes_and_series(graph, pg):
+    cfg = small_cfg(trace=True, trace_rounds=64)
+    r = alg.bfs(pg, _root(graph), cfg)
+    tb = r.trace
+    R, T = 64, pg.T
+    assert tb.tile_busy.shape == (R, T)
+    assert tb.msgs.shape[0] == R and tb.msgs.shape == tb.spills.shape
+    from repro.trace import trace_arrays
+    tr = trace_arrays(tb)
+    # per-channel msgs recorded per round must sum to the Stats totals
+    np.testing.assert_array_equal(tr["msgs"].sum(axis=0),
+                                  np.asarray(r.stats.msgs))
+    np.testing.assert_array_equal(tr["spills"].sum(axis=0),
+                                  np.asarray(r.stats.spills))
+    # busy cycles are bounded by the round's critical-path envelope
+    assert (tr["tile_busy"] <= tr["cyc"][:, None] + 1e-3).all()
+    assert (tr["frontier"] >= 0).all() and (tr["pending"] >= 0).all()
+
+
+# --------------------------------------------------------------------------
+# Cycle-timeline reconciliation (the exporter's acceptance contract).
+# --------------------------------------------------------------------------
+
+def test_reconcile_cycles_exact(graph, pg):
+    from repro.trace import reconcile_cycles
+    cfg = small_cfg(trace=True, trace_rounds=256)
+    r = alg.bfs(pg, _root(graph), cfg)
+    rec = reconcile_cycles(r.trace, float(np.asarray(r.stats.cycles)))
+    assert rec["exact"], rec
+    # per-round increments also sum to the total (f64 tolerance: the
+    # engine's accumulator is Kahan-compensated f32)
+    assert rec["increment_rel_err"] < 1e-6
+
+
+def test_reconcile_detects_wrap(graph, pg):
+    from repro.trace import reconcile_cycles
+    cfg = small_cfg(trace=True, trace_rounds=4)
+    r = alg.bfs(pg, _root(graph), cfg)
+    rec = reconcile_cycles(r.trace, float(np.asarray(r.stats.cycles)))
+    assert not rec["exact"]  # wrapped ring -> cannot certify the timeline
+
+
+# --------------------------------------------------------------------------
+# Exporters: Perfetto JSON, JSONL, summary.
+# --------------------------------------------------------------------------
+
+def test_perfetto_export(graph, pg, tmp_path):
+    from repro.trace import to_perfetto, write_perfetto
+    cfg = small_cfg(trace=True, trace_rounds=256, noc="mesh")
+    r = alg.bfs(pg, _root(graph), cfg)
+    doc = to_perfetto(r.trace, meta={"app": "bfs"})
+    ev = doc["traceEvents"]
+    phs = {e["ph"] for e in ev}
+    assert phs == {"M", "X", "C"}
+    # one engine slice + T tile slices per recorded round
+    n = int(np.asarray(r.stats.rounds))
+    assert sum(e["ph"] == "X" and e["pid"] == 0 for e in ev) == n
+    assert sum(e["ph"] == "X" and e["pid"] == 1 for e in ev) == n * pg.T
+    # slices tile the timeline: engine slice r starts where r-1 ended
+    eng = sorted((e for e in ev if e["ph"] == "X" and e["pid"] == 0),
+                 key=lambda e: e["ts"])
+    for a, b in zip(eng, eng[1:]):
+        assert b["ts"] == pytest.approx(a["ts"] + a["dur"])
+    p = tmp_path / "t.perfetto.json"
+    write_perfetto(r.trace, str(p), meta={"app": "bfs"})
+    assert json.loads(p.read_text())["otherData"]["app"] == "bfs"
+
+
+def test_jsonl_and_summary(graph, pg, tmp_path):
+    from repro.trace import (format_summary, jsonl_rows, summarize,
+                             write_jsonl)
+    cfg = small_cfg(trace=True, trace_rounds=256)
+    r = alg.bfs(pg, _root(graph), cfg)
+    rows = jsonl_rows(r.trace)
+    assert len(rows) == int(r.stats.rounds)
+    assert all(0.0 <= row["util"] <= 1.0 for row in rows)
+    p = tmp_path / "t.jsonl"
+    assert write_jsonl(r.trace, str(p)) == len(rows)
+    back = [json.loads(line) for line in p.read_text().splitlines()]
+    assert back == rows
+    s = summarize(r.trace)
+    assert 0.0 < s["util_mean"] <= 1.0
+    assert s["phases"] and sum(p["rounds"] for p in s["phases"]) == len(rows)
+    txt = format_summary(s)
+    assert "util mean" in txt and "chan" in txt
+
+
+def test_derived_metrics_additive(graph, pg):
+    from repro.perf import derived_metrics
+    cfg0 = small_cfg()
+    cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+    r0 = alg.bfs(pg, _root(graph), cfg0)
+    r1 = alg.bfs(pg, _root(graph), cfg1)
+    plain = derived_metrics(r0.stats, cfg0.perf, pg.T)
+    assert "util_mean" not in plain and "work_cov" not in plain
+    traced = derived_metrics(r1.stats, cfg1.perf, pg.T, trace=r1.trace)
+    assert 0.0 < traced["util_mean"] <= 1.0
+    assert traced["work_cov"] >= 0.0
+    # additive: the trace columns extend, never reorder/replace
+    assert {k: v for k, v in traced.items()
+            if k not in ("util_mean", "work_cov")} == plain
+
+
+# --------------------------------------------------------------------------
+# Serving lanes: per-lane rings == solo rings, recycling resets them.
+# --------------------------------------------------------------------------
+
+@pytest.mark.serve
+def test_serving_lane_traces_match_solo(graph, pg):
+    from repro.serve.lanes import multi_source
+    from repro.trace import lane_trace
+    deg = np.asarray(graph.ptr[1:] - graph.ptr[:-1])
+    srcs = np.flatnonzero(deg > 0)[:3].tolist()
+    cfg0 = small_cfg()
+    cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+    b0 = multi_source(pg, "bfs", srcs, cfg0)
+    b1 = multi_source(pg, "bfs", srcs, cfg1)
+    assert b0.trace is None and b1.trace is not None
+    np.testing.assert_array_equal(b0.values, b1.values)
+    assert_stats_identical(b0.stats, b1.stats, "(lanes B=3)")
+    for lane, s in enumerate(srcs):
+        solo = alg.bfs(pg, int(s), cfg1)
+        lt = lane_trace(b1.trace, lane)
+        for name, x, y in zip(type(lt)._fields, lt, solo.trace):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"TraceBuf.{name} lane {lane}")
+
+
+@pytest.mark.serve
+def test_continuous_recycling_resets_lane_ring(graph, pg):
+    from repro.serve import Frontend
+    deg = np.asarray(graph.ptr[1:] - graph.ptr[:-1])
+    srcs = np.flatnonzero(deg > 0)[:5]
+    cfg = small_cfg(trace=True, trace_rounds=256)
+    fe = Frontend(pg, app="bfs", cfg=cfg, width=2, policy="continuous")
+    rep = fe.serve(srcs)  # 5 queries through 2 lanes => recycling happened
+    assert rep.queries == 5 and rep.drops == 0
+    for rec in rep.records:
+        want = ref.bfs_ref(graph, rec.source)
+        np.testing.assert_array_equal(rec.values, want)
+
+
+# --------------------------------------------------------------------------
+# shard_map SPMD: replicated trace == LocalComm trace (subprocess).
+# --------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np
+    import jax
+    from repro.core import algorithms as alg
+    from repro.core.engine import EngineConfig
+    from repro.core.graph import CSRGraph, rmat_edges
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((8,), ("x",))
+    n, src, dst, val = rmat_edges(7, edge_factor=5, seed=3)
+    g = CSRGraph.from_edges(n, src, dst, val)
+    pg = alg.prepare(g, T=8)
+    root = int(np.argmax(g.ptr[1:] - g.ptr[:-1]))
+    cfg0 = EngineConfig(f_pop=8, r_pop=8, u_pop=16, max_t2=8,
+                        cap_route_range=8, cap_route_update=32,
+                        cap_rangeq=128, cap_updq=4096, max_rounds=5000)
+    cfg1 = dataclasses.replace(cfg0, trace=True, trace_rounds=256)
+
+    # trace-on == trace-off under shard_map
+    r0 = alg.bfs(pg, root, cfg0, mesh=mesh)
+    r1 = alg.bfs(pg, root, cfg1, mesh=mesh)
+    np.testing.assert_array_equal(r0.values, r1.values)
+    for f, a, b in zip(type(r0.stats)._fields, r0.stats, r1.stats):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+
+    # the SPMD trace == the LocalComm trace, leaf for leaf
+    rl = alg.bfs(pg, root, cfg1)
+    for f, a, b in zip(type(rl.trace)._fields, rl.trace, r1.trace):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="TraceBuf." + f)
+
+    # serving lanes under shard_map carry the trace too
+    from repro.serve.lanes import multi_source
+    deg = np.asarray(g.ptr[1:] - g.ptr[:-1])
+    srcs = np.flatnonzero(deg > 0)[:2].tolist()
+    b_spmd = multi_source(pg, "bfs", srcs, cfg1, mesh=mesh)
+    b_loc = multi_source(pg, "bfs", srcs, cfg1)
+    np.testing.assert_array_equal(b_spmd.values, b_loc.values)
+    for f, a, b in zip(type(b_loc.trace)._fields, b_loc.trace,
+                       b_spmd.trace):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="lanes TraceBuf." + f)
+    print("SPMD-TRACE-OK")
+""")
+
+
+@pytest.mark.slow
+def test_trace_spmd_subprocess():
+    r = subprocess.run([sys.executable, "-c", SPMD_SCRIPT],
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SPMD-TRACE-OK" in r.stdout
