@@ -65,14 +65,18 @@ def stats_row(stats, queries=None, qps=None) -> dict:
     pattern: emitted only when nonzero, so every xla row — the whole
     pre-pallas baseline — stays byte-stable; the per-space counters
     (``hbm_windows`` / ``hbm_edges``, PR8) likewise appear only on runs
-    whose edge shard actually streamed from HBM."""
+    whose edge shard actually streamed from HBM, and the migration
+    counters (``migrated_vertices`` / ``migration_cycles`` /
+    ``migration_pj``, PR10) only on runs that applied an adaptive
+    placement plan."""
     out = {}
     if queries is not None:
         out["queries"] = int(queries)
     if qps is not None:
         out["qps"] = round(float(qps), 1)
     for k in stats._fields:
-        if k in ("launches", "hbm_windows", "hbm_edges") \
+        if k in ("launches", "hbm_windows", "hbm_edges",
+                 "migrated_vertices", "migration_cycles", "migration_pj") \
                 and not np.asarray(getattr(stats, k)).any():
             continue  # 0 when the feature is off: omit, keeping the
             #           pre-feature baseline rows byte-stable

@@ -1,0 +1,140 @@
+"""When does adaptive placement pay off? (PR10, repro.place)
+
+The paper's §5 placement study and the ROADMAP's "telemetry-driven
+adaptive placement" item meet here: the static schemes (fig8's hier
+rungs) are the baseline, and the adaptive rung closes the loop — run the
+fig8 workload once with the flight recorder on, feed the observed
+per-tile busy cycles to the planner (:mod:`repro.place`), migrate within
+the budget, and run the SAME query again on the relabeled partition.
+
+Rungs (all on the hier fabric, uncapped links, ``mode="bsp"``):
+
+* ``static``            — low_order placement: the die-oblivious scatter.
+* ``static_dielocal``   — low_order_dielocal: the best *static* scheme
+  (fig8's winner); also the adaptive rung's starting partition and its
+  correctness twin.
+* ``adaptive``          — between-query adaptation: the post-migration
+  rerun of the same BFS root, with the one-time migration priced into
+  ``cycles`` / ``energy_pj`` (and reported separately in the
+  ``migration_*`` columns).  ``ok`` asserts the relabeling contract:
+  values bit-identical to ``static_dielocal``'s.
+* ``adaptive_epoch``    — epoch-boundary adaptation inside one run:
+  :func:`repro.place.adaptive_pagerank` vs the plain pagerank twin
+  (``ok`` = values allclose — the acc-fold order is placement-dependent —
+  and at least one applied plan).
+
+BSP mode keeps message counts structural (one update per scanned edge
+per epoch), so the ``die_flits`` column measures the placement itself
+rather than async re-emission noise; ``busy_share_max`` (hottest tile's
+share of total busy cycles, from the recorder) is the work-balance axis
+— 1/T is perfect balance.  ``benchmarks/smoke.py`` gates the adaptive
+rung strictly improving BOTH columns over ``static_dielocal``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.noc.network import make_network
+from repro.perf.model import die_crossing_frac, flits_by_class
+from repro.place import (adapt_partition, adaptive_pagerank, cfg_tile_die,
+                         plan_from_trace, price_migration, score_tiles)
+from repro.place.migrate import apply_plan
+from benchmarks.common import (engine_cfg, perf_cols, pick_root, rmat_graph,
+                               stats_row)
+
+
+def _busy_share_max(trace) -> float:
+    busy = score_tiles(trace)
+    total = busy.sum()
+    return float(busy.max() / total) if total > 0 else 0.0
+
+
+def _row(rung: str, app: str, res, cfg, T, ndies, net) -> dict:
+    s = res.stats
+    by_cls = flits_by_class(s, net)
+    p = perf_cols(s, cfg, T)
+    row = {
+        "bench": "fig15", "rung": rung, "app": app,
+        "ndies": f"{ndies[0]}x{ndies[1]}",
+        "rounds": int(s.rounds),
+        "msgs": int(np.asarray(s.msgs).sum()),
+        "spills": int(np.asarray(s.spills).sum()),
+        "die_frac": round(die_crossing_frac(s), 3),
+        "die_flits": by_cls.get("die", 0),
+        "busy_share_max": round(_busy_share_max(res.trace), 4),
+        "cycles": p["cycles"],
+        "energy_pj": p["energy_pj"],
+        "util_mean": perf_cols(s, cfg, T, trace=res.trace)["util_mean"],
+    }
+    mig = stats_row(s)
+    for k in ("migrated_vertices", "migration_cycles", "migration_pj"):
+        if k in mig:  # additive, like every post-seed Stats column
+            row[k] = mig[k]
+    return row
+
+
+def run(scale: int = 10, T: int = 16, ndies=(2, 2),
+        budget: int | None = None, trace_rounds: int = 4096) -> list[dict]:
+    """The fig15 rows; ``budget`` defaults to V // 8 (a small slice of the
+    graph — adaptation must win by moving little, or it isn't winning)."""
+    g = rmat_graph(scale)
+    root = pick_root(g)
+    if budget is None:
+        budget = g.num_vertices // 8
+    ndies_y, ndies_x = ndies
+    base_cfg = engine_cfg(T=T, noc="hier", link_cap=0, mode="bsp",
+                          ndies_y=ndies_y, ndies_x=ndies_x, trace=True,
+                          trace_rounds=trace_rounds, adapt_budget=budget)
+    net = make_network(base_cfg, T)
+    rows = []
+
+    # -- static rungs ------------------------------------------------------
+    pgs = {
+        "static": alg.prepare(g, T, scheme="low_order"),
+        "static_dielocal": alg.prepare(g, T, scheme="low_order_dielocal",
+                                       dies=ndies),
+    }
+    results = {}
+    for rung, pg in pgs.items():
+        results[rung] = alg.bfs(pg, root, base_cfg)
+        row = _row(rung, "bfs", results[rung], base_cfg, T, ndies, net)
+        row["ok"] = bool(np.array_equal(results[rung].values,
+                                        results["static"].values))
+        rows.append(row)
+
+    # -- adaptive (between-query): observe -> migrate -> rerun -------------
+    pg0 = pgs["static_dielocal"]
+    obs = results["static_dielocal"]
+    tile_die = cfg_tile_die(base_cfg, T)
+    plan = plan_from_trace(pg0, base_cfg, obs.trace)
+    pg1 = apply_plan(g, pg0, plan, tile_die=tile_die)
+    res = alg.bfs(pg1, root, base_cfg)
+    res = dataclasses.replace(
+        res, stats=price_migration(res.stats, pg0, plan, T,
+                                   params=base_cfg.perf, tile_die=tile_die))
+    row = _row("adaptive", "bfs", res, base_cfg, T, ndies, net)
+    row["plan_pairs"] = plan.num_pairs
+    row["ok"] = bool(np.array_equal(res.values, obs.values))
+    rows.append(row)
+
+    # -- adaptive_epoch: migration inside one pagerank run -----------------
+    iters = 6
+    adapt_cfg = dataclasses.replace(base_cfg, adapt=True, adapt_every=2)
+    twin = alg.pagerank(pg0, iters=iters, cfg=base_cfg)
+    ares, _, plans = adaptive_pagerank(g, pg0, iters=iters, cfg=adapt_cfg,
+                                       params=adapt_cfg.perf)
+    row = _row("adaptive_epoch", "pagerank", ares, adapt_cfg, T, ndies, net)
+    row["plan_pairs"] = sum(p.num_pairs for p in plans)
+    row["ok"] = bool(np.allclose(ares.values, twin.values,
+                                 rtol=1e-6, atol=1e-12)
+                     and len(plans) > 0)
+    rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))

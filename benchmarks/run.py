@@ -18,8 +18,9 @@ def main() -> None:
     from benchmarks import (fig5_ablation, fig6_scaling, fig7_throughput,
                             fig8_noc, fig10_energy, fig11_backend,
                             fig12_serving, fig13_memspace,
-                            fig14_utilization, kern_micro, lm_micro,
-                            roofline, taskgraphs, work_efficiency)
+                            fig14_utilization, fig15_adaptive, kern_micro,
+                            lm_micro, roofline, taskgraphs,
+                            work_efficiency)
 
     print("# fig5: optimization-ladder ablation (paper Fig. 5)")
     _emit(fig5_ablation.run(scale=8 if fast else 10, T=8 if fast else 16,
@@ -73,6 +74,10 @@ def main() -> None:
         ndies=(2, 2),
         combos=fig14_utilization.COMBOS[:2] if fast
         else fig14_utilization.COMBOS))
+    print("# fig15: adaptive placement — telemetry-driven migration vs "
+          "the static die-local baseline (observe -> migrate -> rerun)")
+    _emit(fig15_adaptive.run(scale=8 if fast else 10, T=8 if fast else 16,
+                             ndies=(2, 1) if fast else (2, 2)))
     print("# taskgraphs: new workloads on the generic task-program executor")
     _emit(taskgraphs.run(scale=8 if fast else 10, T=8 if fast else 16,
                          ks=(2,) if fast else (2, 3, 4)))

@@ -14,12 +14,17 @@ ladder (VMEM-resident vs HBM-streamed edge shards: bit-identical values,
 per-space pricing, the config-time rejection of an over-budget all-VMEM
 layout), and the fig14 utilization rows (flight-recorder traces across
 noc x placement x policy; every row asserts trace-on is bit-identical to
-the untraced run and carries ``util_mean > 0``) at T=4 / scale=6,
+the untraced run and carries ``util_mean > 0`` and a finite
+``work_cov``), and the fig15 adaptive-placement rows (telemetry-driven
+migration: the adaptive rung must STRICTLY beat the best static
+die-local placement on both die-crossing flits and hottest-tile busy
+share, with the relabeling contract asserted per row) at T=4 / scale=6,
 asserts the no-drop invariant and the reference checks on every row, and
 writes the
 rows — cycle/energy model columns included — as ``BENCH_PR3.json``; the
-fig11 / fig12 / fig13 / fig14 rows are additionally written standalone as
-``BENCH_FIG11.json`` / ... / ``BENCH_FIG14.json``, plus one example
+fig11 / fig12 / fig13 / fig14 / fig15 rows are additionally written
+standalone as
+``BENCH_FIG11.json`` / ... / ``BENCH_FIG15.json``, plus one example
 flight-recorder trace (``smoke.perfetto.json``, loadable at
 ui.perfetto.dev) — all uploaded as CI artifacts.
 
@@ -99,6 +104,9 @@ def main() -> int:
     ap.add_argument("--fig14-out", default="BENCH_FIG14.json",
                     help="standalone copy of the fig14 utilization rows; "
                          "'none' to skip")
+    ap.add_argument("--fig15-out", default="BENCH_FIG15.json",
+                    help="standalone copy of the fig15 adaptive-placement "
+                         "rows; 'none' to skip")
     ap.add_argument("--perfetto-out", default="smoke.perfetto.json",
                     help="example flight-recorder Perfetto export "
                          "(CI artifact); 'none' to skip")
@@ -112,7 +120,8 @@ def main() -> int:
     t0 = time.time()
     from benchmarks import (fig5_ablation, fig8_noc, fig11_backend,
                             fig12_serving, fig13_memspace,
-                            fig14_utilization, kern_micro, taskgraphs)
+                            fig14_utilization, fig15_adaptive, kern_micro,
+                            taskgraphs)
 
     rows = fig5_ablation.run(scale=args.scale, T=args.tiles)
     rows += taskgraphs.run(scale=args.scale, T=args.tiles, ks=(2, 3))
@@ -152,6 +161,12 @@ def main() -> int:
     fig14 = fig14_utilization.run(scale=args.scale, T=args.tiles,
                                   ndies=(2, 1))
     rows += fig14
+    # the fig15 adaptive-placement rows: static rungs -> observe -> migrate
+    # -> rerun, with the relabeling contract asserted per row (`ok`) and
+    # the one-time migration priced into cycles/energy
+    fig15 = fig15_adaptive.run(scale=args.scale, T=args.tiles,
+                               ndies=(2, 1))
+    rows += fig15
 
     bad = []
     if not any(r.get("backend") == "pallas" for r in rows):
@@ -173,17 +188,43 @@ def main() -> int:
         bad.append("fig13 must emit an ok space=hbm row with "
                    "hbm_windows > 0")
     # every traced fig14 row must record real utilization (a 0 means the
-    # recorder captured nothing — the ring/exporter wiring broke)
+    # recorder captured nothing — the ring/exporter wiring broke) AND a
+    # finite work-imbalance CoV: `not (x >= 0)` catches a NaN (every
+    # comparison with NaN is False) as well as a missing column, so a
+    # silently-NaN covariance fails CI instead of serializing as null
     bad += [r for r in rows
-            if r.get("bench") == "fig14" and r.get("util_mean", 0) <= 0]
+            if r.get("bench") == "fig14"
+            and (r.get("util_mean", 0) <= 0
+                 or not (r.get("work_cov", -1.0) >= 0))]
     if not any(r.get("bench") == "fig14" for r in rows):
         bad.append("smoke must emit fig14 utilization rows")
+    # the fig15 gate: adaptation must PAY — the adaptive rung strictly
+    # reduces BOTH die-crossing flits and the hottest tile's busy-cycle
+    # share vs the best static die-local placement (its starting point)
+    f15 = {r.get("rung"): r for r in rows if r.get("bench") == "fig15"}
+    if "adaptive" not in f15 or "static_dielocal" not in f15:
+        bad.append("smoke must emit fig15 adaptive + static_dielocal rows")
+    elif not (f15["adaptive"]["die_flits"]
+              < f15["static_dielocal"]["die_flits"]
+              and f15["adaptive"]["busy_share_max"]
+              < f15["static_dielocal"]["busy_share_max"]):
+        bad.append(
+            "fig15 adaptive must strictly beat static_dielocal on "
+            "die_flits AND busy_share_max: "
+            f"{f15['adaptive']} vs {f15['static_dielocal']}")
     # additive-keys stability: the recorder's columns may appear ONLY on
-    # traced (fig14) rows — a leak onto any other row would perturb the
-    # committed pre-trace baseline rows byte-for-byte
+    # traced (fig14 / fig15) rows — a leak onto any other row would
+    # perturb the committed pre-trace baseline rows byte-for-byte
     bad += [r for r in rows
-            if r.get("bench") != "fig14"
+            if r.get("bench") not in ("fig14", "fig15")
             and ("util_mean" in r or "work_cov" in r)]
+    # additive-keys stability: the migration counters may appear ONLY on
+    # fig15 rows whose run actually migrated (the adaptive rungs)
+    bad += [r for r in rows
+            if not (r.get("bench") == "fig15"
+                    and str(r.get("rung", "")).startswith("adaptive"))
+            and ("migrated_vertices" in r or "migration_cycles" in r
+                 or "migration_pj" in r)]
     # additive-keys stability: the per-space counters may appear ONLY on
     # hbm rows — a leak onto any other row would perturb the committed
     # pre-memspace baseline rows byte-for-byte
@@ -204,6 +245,9 @@ def main() -> int:
     if args.fig14_out != "none":
         with open(args.fig14_out, "w") as f:
             json.dump(fig14, f, indent=1)
+    if args.fig15_out != "none":
+        with open(args.fig15_out, "w") as f:
+            json.dump(fig15, f, indent=1)
     if args.perfetto_out != "none":
         # one loadable example trace (ui.perfetto.dev) as a CI artifact
         import dataclasses as _dc

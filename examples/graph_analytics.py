@@ -85,11 +85,21 @@ def main():
     edge_space = args.edge_space if args.edge_space is not None else \
         (wl.edge_space if wl else "vmem")
     hbm_window = wl.hbm_window if wl else 0
-    EngineConfig = functools.partial(_EngineConfig, backend=backend,
-                                     noc=noc, ndies_y=ndies[0],
-                                     ndies_x=ndies[1],
-                                     edge_space=edge_space,
-                                     hbm_window=hbm_window)
+    cfg_kw = dict(backend=backend, noc=noc, ndies_y=ndies[0],
+                  ndies_x=ndies[1], edge_space=edge_space,
+                  hbm_window=hbm_window,
+                  adapt=wl.adapt if wl else False,
+                  adapt_every=wl.adapt_every if wl else 4,
+                  adapt_budget=wl.adapt_budget if wl else 64)
+    # size the queues from the engine's worst-case inflow when the grid
+    # outgrows the defaults (the T=64 hier presets), like
+    # benchmarks.common.engine_cfg; smaller grids keep the defaults
+    rangeq, burst = _EngineConfig(**cfg_kw).min_caps(tiles)
+    cfg_kw["cap_rangeq"] = max(_EngineConfig.cap_rangeq,
+                               1 << (rangeq - 1).bit_length())
+    cfg_kw["cap_updq"] = max(_EngineConfig.cap_updq,
+                             1 << (burst - 1).bit_length())
+    EngineConfig = functools.partial(_EngineConfig, **cfg_kw)
 
     n, src, dst, val = rmat_edges(scale, edge_factor=ef, seed=1)
     g = CSRGraph.from_edges(n, src, dst, val)
@@ -118,7 +128,20 @@ def main():
                 res = alg.wcc(pgs, c)
                 ok = (res.values == ref.wcc_ref(gs)).all()
             elif app == "pagerank":  # keeps its barrier, as in the paper
-                res = alg.pagerank(pg, iters=8, cfg=EngineConfig(mode="bsp"))
+                prc = EngineConfig(mode="bsp")
+                if prc.adapt:
+                    # adaptive preset: migrate at epoch boundaries from
+                    # the recorder's busy cycles (repro.place); the
+                    # relabeling contract keeps the reference check intact
+                    import dataclasses as _dc
+
+                    from repro.place import adaptive_pagerank
+                    prc = _dc.replace(prc, trace=True, trace_rounds=4096)
+                    res, _, plans = adaptive_pagerank(g, pg, iters=8,
+                                                      cfg=prc)
+                    assert plans, "adapt preset applied no migration plan"
+                else:
+                    res = alg.pagerank(pg, iters=8, cfg=prc)
                 ok = np.allclose(res.values, ref.pagerank_ref(g, iters=8),
                                  rtol=2e-3, atol=1e-7)
             else:

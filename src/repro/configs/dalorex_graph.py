@@ -32,6 +32,12 @@ class GraphWorkload:
     # next pow2 >= max_t2) — bit-identical values, per-space pricing
     edge_space: str = "vmem"
     hbm_window: int = 0
+    # telemetry-driven adaptive placement (repro.place): relabel hot
+    # vertices at epoch/query boundaries, at most ``adapt_budget`` moved
+    # vertices per plan, every ``adapt_every`` epochs/batches
+    adapt: bool = False
+    adapt_every: int = 4
+    adapt_budget: int = 64
 
 
 PRESETS = {
@@ -51,6 +57,14 @@ PRESETS = {
     "rmat-hier": GraphWorkload("rmat-hier", scale=12, tiles=64,
                                noc="hier", ndies=(2, 2),
                                placement="low_order_dielocal"),
+    # rmat-hier with the trace -> placement loop closed: epoch/query
+    # boundaries migrate hot vertices die-aware within the budget
+    # (DESIGN.md "Adaptive placement"; benchmarks/fig15_adaptive.py)
+    "rmat-hier-adapt": GraphWorkload("rmat-hier-adapt", scale=12, tiles=64,
+                                     noc="hier", ndies=(2, 2),
+                                     placement="low_order_dielocal",
+                                     adapt=True, adapt_every=2,
+                                     adapt_budget=128),
     # HBM-resident edge shards (DESIGN.md "Memory spaces"): the per-tile
     # edge segments stream through double-buffered segment DMA instead of
     # assuming the shard fits the tile's VMEM — the beyond-VMEM scaling

@@ -263,14 +263,13 @@ def kcore(pg: PartitionedGraph, k: int, cfg: EngineConfig = EngineConfig(),
     return Result(member, stats, trace=trace)
 
 
-def prepare_triangles(g: CSRGraph, T: int,
-                      scheme: str = "low_order") -> PartitionedGraph:
-    """Partition for triangle counting: vertex-aligned edges (each tile
-    owns its vertices' full adjacency) with every per-vertex segment sorted
-    by placed destination, so the closing-edge check is a local binary
-    search.  ``g`` must be symmetric and deduplicated (use
-    :func:`symmetrize`)."""
-    pg = partition_graph(g, T, scheme, edge_mode="vertex_aligned")
+def sort_adjacency(pg: PartitionedGraph) -> PartitionedGraph:
+    """Sort every per-vertex edge segment by placed destination id.
+
+    Factored out of :func:`prepare_triangles` so a migration pass
+    (repro.place) can restore the ``sorted_adj`` layout after re-dealing
+    segments: the sort key is the *placed* destination, so it must be
+    re-applied whenever the owner map changes."""
     dst = np.asarray(pg.edge_dst).copy()
     val = np.asarray(pg.edge_val).copy()
     degs = np.asarray(pg.deg)
@@ -284,6 +283,17 @@ def prepare_triangles(g: CSRGraph, T: int,
     return dataclasses.replace(pg, edge_dst=jnp.asarray(dst, jnp.int32),
                                edge_val=jnp.asarray(val, jnp.float32),
                                sorted_adj=True)
+
+
+def prepare_triangles(g: CSRGraph, T: int,
+                      scheme: str = "low_order") -> PartitionedGraph:
+    """Partition for triangle counting: vertex-aligned edges (each tile
+    owns its vertices' full adjacency) with every per-vertex segment sorted
+    by placed destination, so the closing-edge check is a local binary
+    search.  ``g`` must be symmetric and deduplicated (use
+    :func:`symmetrize`)."""
+    return sort_adjacency(partition_graph(g, T, scheme,
+                                          edge_mode="vertex_aligned"))
 
 
 def triangles(pg: PartitionedGraph, cfg: EngineConfig = EngineConfig(),

@@ -193,6 +193,19 @@ class EngineConfig:
     trace: bool = False
     trace_every: int = 1
     trace_rounds: int = 512
+    # --- telemetry-driven adaptive placement (repro.place) ---
+    # ``adapt=True`` lets the epoch-boundary repartitioner run: between
+    # engine epochs (host-driven, e.g. PageRank's) or between serving
+    # queries, a migration plan derived from the flight recorder's
+    # per-tile busy series / the partition's die-affinity is applied as a
+    # pure relabeling (repro.place.apply_plan).  ``adapt_every`` is the
+    # epoch/batch cadence; ``adapt_budget`` caps migrated vertices per
+    # adaptation.  The engine round loop itself never migrates — plans
+    # apply only at quiescent boundaries, so converged values stay
+    # bit-identical to the unmigrated run (tests/test_place.py).
+    adapt: bool = False
+    adapt_every: int = 1
+    adapt_budget: int = 64
 
     def min_caps(self, T: int) -> tuple[int, int]:
         """Worst-case per-round queue inflow for the *classic* program
@@ -265,6 +278,19 @@ class Stats(NamedTuple):
     hbm_edges: jax.Array            # () edge words streamed from HBM
                                     # (windows * window size), priced at
                                     # t_hbm / e_hbm
+    # --- adaptive-placement migration accounting (repro.place; 0 unless
+    # a migration plan was applied between epochs/queries — stats_row
+    # omits the columns when zero, the same additive convention as
+    # ``launches``, so pre-adaptive baseline rows stay byte-stable.
+    # Added host-side by repro.place.price_migration at the quiescent
+    # boundary the plan applied at; the in-loop round accumulator only
+    # carries them through) ---
+    migrated_vertices: jax.Array    # () vertices moved by applied plans
+    migration_cycles: jax.Array     # () modeled cycles of the moves (also
+                                    # folded into ``cycles``)
+    migration_pj: jax.Array         # () modeled energy of the moves (also
+                                    # folded into ``energy_pj``; kept so
+                                    # energy_from_totals reconciles)
 
     # Legacy scalar views: the classic program's two channels.
     @property
@@ -295,7 +321,7 @@ class Stats(NamedTuple):
                      jnp.zeros((num_links,), jnp.int32), z,
                      jnp.zeros((max_hops + 1,), jnp.int32),
                      jnp.zeros((max_die_crossings + 1,), jnp.int32),
-                     zf, zf, z, z, z)
+                     zf, zf, z, z, z, z, zf, zf)
 
 
 def zero_stats(cfg: EngineConfig, T: int, alg=BFS) -> Stats:
@@ -744,6 +770,9 @@ def make_round(comm, net, cfg: EngineConfig, prog: Program, e_chunk: int,
             launches=stats.launches + jnp.int32(launch_tally.n),
             hbm_windows=stats.hbm_windows + hw_g,
             hbm_edges=stats.hbm_edges + he_g,
+            migrated_vertices=stats.migrated_vertices,
+            migration_cycles=stats.migration_cycles,
+            migration_pj=stats.migration_pj,
         )
         if tracing:
             # Flight recorder (repro.trace): pure reads of telemetry the

@@ -109,7 +109,7 @@ def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
     """``dies=(ndies_y, ndies_x)`` builds the tile -> die map for the
     ``*_dielocal`` placement schemes from the near-square grid the NoC
     uses by default; pass an explicit ``tile_die`` for custom grids."""
-    V, E = g.num_vertices, g.num_edges
+    V = g.num_vertices
     deg = (g.ptr[1:] - g.ptr[:-1]
            if scheme.startswith("degree_interleave") else None)
     if tile_die is None and dies is not None:
@@ -120,6 +120,24 @@ def partition_graph(g: CSRGraph, T: int, scheme: str = "low_order",
         # messages chase drifted edge chunks across dies (module docstring)
         edge_mode = "die_aligned"
     place, inv = placement(V, T, scheme, deg=deg, tile_die=tile_die)
+    return build_partition(g, T, place, inv, edge_mode, tile_die=tile_die)
+
+
+def build_partition(g: CSRGraph, T: int, place: np.ndarray, inv: np.ndarray,
+                    edge_mode: str = "equal_edges",
+                    tile_die: np.ndarray | None = None) -> PartitionedGraph:
+    """Materialize the shards for an explicit ``(place, inv)`` pair.
+
+    This is the realization half of :func:`partition_graph` (which derives
+    the pair from a named scheme first): given any placement permutation —
+    a scheme's, or one produced by composing a scheme with a migration
+    plan (:mod:`repro.place`) — rebuild the placed CSR and deal the edge
+    arrays.  Two calls with the same ``(place, inv, edge_mode, tile_die)``
+    produce bitwise-identical shards, which is what makes a migration a
+    pure relabeling: the migrated partition is indistinguishable from
+    having *started* with the composed placement.
+    """
+    V, E = g.num_vertices, g.num_edges
     v_pad = len(inv)
     vdist = DistSpec(v_pad, T)
 

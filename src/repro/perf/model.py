@@ -87,6 +87,10 @@ class PerfParams:
                               # double-buffered DMA window; conservative
                               # no-overlap, like the rest of the model)
     t_round: int = 1          # fixed per-round pipeline overhead
+    t_migrate: int = 2        # per 64-bit word of migrated vertex state /
+                              # edge segment (SRAM read + write at the new
+                              # owner; the NoC hop cost is priced on top
+                              # via the hop tables)
     # --- energy costs (pJ) ---
     e_alu: float = 0.5
     e_sram: float = 5.0
@@ -102,6 +106,8 @@ class PerfParams:
                               # (~3.9 pJ/bit, HBM2-era — the ~50x-vs-SRAM
                               # gap the UPMEM/PIM literature prices; the
                               # reason "move compute to the data" wins)
+    e_migrate: float = 10.0   # per migrated 64-bit word (paired SRAM
+                              # read + write; hop energy priced on top)
     e_leak_tile_cycle: float = 0.05  # static leakage, per tile per cycle
 
     # Derived per-event costs of the two handler kinds ("edges"-tagged
@@ -224,6 +230,25 @@ def round_energy_pj(params: PerfParams, T: int, edges_g, updates_g,
     return out
 
 
+def migration_cost(params: PerfParams, words_intra: int,
+                   words_cross: int) -> tuple[float, float]:
+    """Price a migration plan (repro.place): modeled ``(cycles, pJ)``.
+
+    ``words_intra``/``words_cross`` are 64-bit words moved between tiles
+    of the same die vs across a die boundary.  Every word pays the paired
+    SRAM read+write (``t_migrate``/``e_migrate``); cross-die words
+    additionally pay one die-class hop — the dominant wire for an
+    epoch-boundary bulk move, and the term the die-aware planner is
+    trying to avoid.  The caller folds the result into ``Stats.cycles``/
+    ``energy_pj`` and records it in ``Stats.migration_cycles``/
+    ``migration_pj`` so ``energy_from_totals`` still reconciles.
+    """
+    words = float(words_intra) + float(words_cross)
+    cycles = params.t_migrate * words + params.t_hop_die * float(words_cross)
+    pj = params.e_migrate * words + params.e_hop_die * float(words_cross)
+    return cycles, pj
+
+
 def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
     """Recompute total energy from the final Stats counters (oracle for
     the accumulated ``Stats.energy_pj``; the tests assert they agree)."""
@@ -235,12 +260,14 @@ def energy_from_totals(stats, params: PerfParams, net, T: int) -> float:
     flits = np.asarray(stats.flits_per_link, np.float64)
     cycles = float(np.asarray(stats.cycles))
     hbm_edges = float(np.asarray(getattr(stats, "hbm_edges", 0)))
+    migration_pj = float(np.asarray(getattr(stats, "migration_pj", 0)))
     return (edges * params.e_scan + updates * params.e_fold
             + msgs * (params.e_push + params.e_pop)
             + spills * params.e_spill
             + float((flits * np.asarray(e_hop, np.float64)).sum())
             + float(np.asarray(leak_pj(params, T, np.float32(cycles))))
-            + hbm_edges * params.e_hbm)
+            + hbm_edges * params.e_hbm
+            + migration_pj)
 
 
 def serving_metrics(queries: int, cycles: float, energy_pj: float,

@@ -1,0 +1,27 @@
+"""Telemetry-driven adaptive placement (epoch-boundary migration).
+
+Closes the trace -> placement loop the ROADMAP asks for: the flight
+recorder (:mod:`repro.trace`) observes per-tile busy cycles and per-class
+link traffic; the planner (:mod:`.plan`) turns them into a die-aware
+vertex-swap plan; the migrator (:mod:`.migrate`) applies the plan as a
+pure relabeling of the owner map (converged values bit-identical to the
+unmigrated run — the contract ``tests/test_place.py`` enforces) and
+prices the move into the perf model; :mod:`.adapt` glues the three into
+epoch-boundary (``adaptive_pagerank``) and between-query
+(:class:`repro.serve.frontend.Frontend`) call sites.
+"""
+from repro.place.adapt import (adapt_partition, adaptive_pagerank,
+                               cfg_tile_die, plan_from_trace)
+from repro.place.migrate import (apply_plan, migration_words, price_migration,
+                                 remap_state, swap_permutation)
+from repro.place.plan import (MigrationPlan, empty_plan, indegree_mass,
+                              migration_plan, placed_edges, score_tiles,
+                              validate_plan, vertex_die_affinity)
+
+__all__ = [
+    "MigrationPlan", "adapt_partition", "adaptive_pagerank", "apply_plan",
+    "cfg_tile_die", "empty_plan", "indegree_mass", "migration_plan",
+    "migration_words", "placed_edges", "plan_from_trace", "price_migration",
+    "remap_state", "score_tiles", "swap_permutation", "validate_plan",
+    "vertex_die_affinity",
+]

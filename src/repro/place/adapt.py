@@ -1,0 +1,114 @@
+"""Closing the loop: telemetry in, adapted partition out.
+
+Glue between the flight recorder (:mod:`repro.trace`), the planner
+(:mod:`repro.place.plan`) and the relabeling machinery
+(:mod:`repro.place.migrate`): :func:`adapt_partition` is the one call
+sites use between epochs / queries, and :func:`adaptive_pagerank` is the
+reference epoch-boundary driver — the same host loop as
+:func:`repro.core.algorithms.pagerank`, but every ``cfg.adapt_every``
+epochs it reads the last epoch's ring, migrates, remaps the rank vector
+through original vertex ids, and prices the move into the accumulated
+Stats.  Migration happens only at quiescent points (the engine is fully
+drained between epochs), so no in-flight message ever sees a stale owner.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConfig, PAGERANK, zero_stats
+from repro.core.graph import CSRGraph, PartitionedGraph
+from repro.place.migrate import apply_plan, price_migration
+from repro.place.plan import MigrationPlan, empty_plan, migration_plan, \
+    score_tiles
+
+
+def cfg_tile_die(cfg: EngineConfig, T: int) -> np.ndarray | None:
+    """The tile -> die map of ``cfg``'s fabric (None off the hier NoC)."""
+    if cfg.noc != "hier" or cfg.ndies_x * cfg.ndies_y <= 1:
+        return None
+    from repro.noc.topology import tile_die_map
+    return tile_die_map(T, cfg.noc_rows, cfg.ndies_y, cfg.ndies_x)
+
+
+def plan_from_trace(pg: PartitionedGraph, cfg: EngineConfig,
+                    trace) -> MigrationPlan:
+    """Score the recorder's ring and plan within ``cfg.adapt_budget``."""
+    busy = score_tiles(trace) if trace is not None else None
+    return migration_plan(pg, busy, budget=cfg.adapt_budget,
+                          tile_die=cfg_tile_die(cfg, pg.T))
+
+
+def adapt_partition(g: CSRGraph, pg: PartitionedGraph, cfg: EngineConfig,
+                    trace=None, busy=None
+                    ) -> tuple[PartitionedGraph, MigrationPlan]:
+    """One adaptation step: plan from telemetry, apply, return both.
+
+    ``trace`` (a flight-recorder ring) wins over ``busy`` (a precomputed
+    (T,) busy vector); with neither, the planner falls back to static
+    in-degree mass.  Returns ``(pg, empty_plan())`` when the planner
+    finds nothing to move — callers can cheaply call this every epoch.
+    """
+    if busy is None and trace is not None:
+        busy = score_tiles(trace)
+    tile_die = cfg_tile_die(cfg, pg.T)
+    plan = migration_plan(pg, busy, budget=cfg.adapt_budget,
+                          tile_die=tile_die)
+    if not plan.num_pairs:
+        return pg, empty_plan()
+    return apply_plan(g, pg, plan, tile_die=tile_die), plan
+
+
+def adaptive_pagerank(g: CSRGraph, pg: PartitionedGraph,
+                      damping: float = 0.85, iters: int = 20,
+                      cfg: EngineConfig = EngineConfig(), mesh=None,
+                      params=None):
+    """Epoch-synchronized PageRank with epoch-boundary migration.
+
+    Requires ``cfg.trace`` when adapting from observed busy cycles;
+    without a trace the planner's static fallback is used.  The relabeling
+    contract makes each post-migration epoch bit-identical to the same
+    epoch run on a partition *built* with the composed placement; against
+    the unmigrated twin, values agree to float tolerance in general (the
+    per-vertex acc fold order follows message arrival order, which is
+    placement-dependent) and bitwise on instances whose epoch arithmetic
+    is order-independent — integer-valued sums, or the dyadic pagerank
+    instances ``tests/test_place.py`` constructs.
+
+    Returns ``(result, pg_final, plans)``.
+    """
+    from repro.core.algorithms import (Result, _acc_stats, _call, real_mask,
+                                       to_original)
+    V = pg.num_vertices
+    real = real_mask(pg)
+    deg = np.asarray(pg.deg)
+    rank = np.where(real, np.float32(1.0 / V), 0.0).astype(np.float32)
+    total = zero_stats(cfg, pg.T, PAGERANK)
+    plans: list[MigrationPlan] = []
+    trace = None
+    tile_die = cfg_tile_die(cfg, pg.T)
+    for epoch in range(iters):
+        if (cfg.adapt and epoch and epoch % max(cfg.adapt_every, 1) == 0):
+            pg2, plan = adapt_partition(g, pg, cfg, trace=trace)
+            if plan.num_pairs:
+                from repro.place.migrate import remap_state
+                rank = np.asarray(remap_state(pg, pg2, rank,
+                                              fill=np.float32(0.0)))
+                total = price_migration(total, pg, plan, pg.T,
+                                        params=params, tile_die=tile_die)
+                pg = pg2
+                real = real_mask(pg)
+                deg = np.asarray(pg.deg)
+                plans.append(plan)
+        frontier = jnp.asarray(real & (deg > 0))
+        _, acc, stats, trace = _call(pg, PAGERANK, cfg, jnp.asarray(rank),
+                                     frontier, mesh)
+        acc = np.asarray(acc)
+        dangling = rank[real & (deg == 0)].sum()
+        rank = np.where(
+            real, (1 - damping) / V + damping * (acc + dangling / V),
+            0.0).astype(np.float32)
+        total = _acc_stats(total, stats)
+    res = Result(to_original(pg, rank).astype(np.float64), total, iters,
+                 trace=trace)
+    return res, pg, plans

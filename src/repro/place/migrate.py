@@ -1,0 +1,133 @@
+"""Applying a migration plan: relabel, re-deal, remap, price.
+
+The load-bearing contract of :mod:`repro.place` lives here: applying a
+plan is a *pure relabeling* of the owner map.  :func:`apply_plan` composes
+the swap permutation with ``pg.place`` and rebuilds the shards through the
+same :func:`repro.core.graph.build_partition` that built the original —
+so the migrated partition is bitwise indistinguishable from one that
+*started* with the composed placement, and converged values (mapped back
+to original vertex ids) cannot depend on whether, or when, a migration
+happened.  ``tests/test_place.py`` holds the engine to that.
+
+Pricing follows the paper's cost discipline: nothing is free.  A migrated
+vertex moves its state words (value, acc, frontier bit ~ 3 words) and its
+edge segment (``deg`` words); cross-die moves additionally ride the
+die-to-die serdes.  :func:`price_migration` folds the modeled cycles and
+energy into ``Stats`` — including the leakage of the added cycles, so the
+``energy_from_totals`` oracle still reconciles — and records the three
+``migrated_vertices`` / ``migration_cycles`` / ``migration_pj`` counters
+that fig15 reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import CSRGraph, PartitionedGraph, build_partition
+from repro.place.plan import MigrationPlan, validate_plan
+
+
+def swap_permutation(n_pad: int, pairs: np.ndarray) -> np.ndarray:
+    """(n_pad,) int64 involution exchanging each pair's slots."""
+    perm = np.arange(n_pad, dtype=np.int64)
+    p = np.asarray(pairs, np.int64)
+    if len(p):
+        perm[p[:, 0]] = p[:, 1]
+        perm[p[:, 1]] = p[:, 0]
+    return perm
+
+
+def apply_plan(g: CSRGraph, pg: PartitionedGraph, plan: MigrationPlan,
+               tile_die: np.ndarray | None = None) -> PartitionedGraph:
+    """Rebuild ``pg`` with ``plan``'s swaps composed into the owner map.
+
+    Needs the host CSR ``g`` (the partition stores only placed shards) to
+    re-deal the affected edge segments.  Preserves ``edge_mode`` and —
+    via :func:`repro.core.algorithms.sort_adjacency` — the ``sorted_adj``
+    layout triangle counting depends on.  Note ``e_chunk`` may change in
+    the ``die_aligned`` / ``vertex_aligned`` modes (per-die / per-tile
+    skew moved); callers re-validate queue sizing against the new shape.
+    """
+    validate_plan(pg, plan)
+    perm = swap_permutation(len(pg.inv), plan.pairs)
+    place_new = perm[pg.place]
+    inv_new = np.empty_like(pg.inv)
+    inv_new[perm] = pg.inv
+    pg2 = build_partition(g, pg.T, place_new, inv_new, pg.edge_mode,
+                          tile_die=tile_die)
+    if pg.sorted_adj:
+        from repro.core.algorithms import sort_adjacency
+        pg2 = sort_adjacency(pg2)
+    return pg2
+
+
+# State words moved per vertex besides its edge segment: value, acc, and
+# the packed frontier/metadata word.
+STATE_WORDS = 3
+
+
+def migration_words(pg: PartitionedGraph, plan: MigrationPlan,
+                    tile_die: np.ndarray | None = None
+                    ) -> tuple[int, int]:
+    """64-bit words ``(intra_die, cross_die)`` the plan moves.
+
+    Each *real* vertex in a pair moves ``STATE_WORDS + deg`` words (its
+    state plus its out-edge segment); padding holes move nothing.  A word
+    is cross-die when its pair's two slots live on different dies.
+    """
+    if not len(plan.pairs):
+        return 0, 0
+    deg = np.asarray(pg.deg, np.int64).reshape(-1)
+    real = pg.inv >= 0
+    td = (np.asarray(tile_die, np.int64) if tile_die is not None
+          else np.zeros(pg.T, np.int64))
+    die_of = td[np.asarray(plan.pairs, np.int64) // pg.v_chunk]  # (M, 2)
+    cross = die_of[:, 0] != die_of[:, 1]
+    slots = np.asarray(plan.pairs, np.int64)
+    words = np.where(real[slots], STATE_WORDS + deg[slots], 0)  # (M, 2)
+    per_pair = words.sum(axis=1)
+    return (int(per_pair[~cross].sum()), int(per_pair[cross].sum()))
+
+
+def price_migration(stats, pg: PartitionedGraph, plan: MigrationPlan,
+                    T: int, params=None,
+                    tile_die: np.ndarray | None = None):
+    """Fold the plan's modeled migration cost into ``stats`` (host-side).
+
+    Adds ``migration_cost`` cycles/energy plus the leakage of the added
+    cycles (so ``energy_from_totals``, which derives leakage from total
+    cycles, stays an exact oracle), and bumps the three migration
+    counters.  Returns the updated Stats.
+    """
+    from repro.perf.model import PerfParams, leak_pj, migration_cost
+    params = params or PerfParams()
+    wi, wc = migration_words(pg, plan, tile_die)
+    cyc, pj = migration_cost(params, wi, wc)
+    leak = float(np.asarray(leak_pj(params, T, np.float32(cyc))))
+    moved = plan.moved_vertices(pg)
+    return stats._replace(
+        cycles=stats.cycles + np.float32(cyc),
+        energy_pj=stats.energy_pj + np.float32(pj + leak),
+        migrated_vertices=stats.migrated_vertices + np.int32(moved),
+        migration_cycles=stats.migration_cycles + np.float32(cyc),
+        migration_pj=stats.migration_pj + np.float32(pj),
+    )
+
+
+def remap_state(pg_old: PartitionedGraph, pg_new: PartitionedGraph,
+                arr, fill=0.0) -> np.ndarray:
+    """Carry a ``(T, v_chunk)`` placed-space array across a migration.
+
+    Routes through original vertex ids — ``out[slot owning v] = in[slot
+    that owned v]`` — so it is exact for any pair of partitions of the
+    same graph, not just swap-related ones.  Padding slots get ``fill``.
+    """
+    flat = np.asarray(arr).reshape(-1)
+    ok_old = pg_old.inv >= 0
+    orig = np.full(pg_old.num_vertices, fill, flat.dtype)
+    orig[pg_old.inv[ok_old]] = flat[ok_old]
+    ok_new = pg_new.inv >= 0
+    out = np.full(len(pg_new.inv), fill, flat.dtype)
+    out[ok_new] = orig[pg_new.inv[ok_new]]
+    return out.reshape(pg_new.T, pg_new.v_chunk)

@@ -113,6 +113,7 @@ class ServeReport:
                              # per-lane rounds — each lane == its solo run)
     drops: int = 0           # summed over lanes; MUST be 0 (backpressure)
     f_ghz: float = 1.0
+    migrated_vertices: int = 0  # vertices moved by between-batch adaptation
 
     @property
     def queries(self) -> int:
@@ -145,7 +146,7 @@ class ServeReport:
         return float(np.percentile([r.latency for r in self.records], q))
 
     def row(self) -> dict:
-        return {
+        row = {
             "app": self.app, "policy": self.policy, "width": self.width,
             "arrival": self.arrival, "queries": self.queries,
             "batches": self.batches, "rounds": self.total_rounds,
@@ -160,6 +161,9 @@ class ServeReport:
             "lat_p95": int(round(self.latency_cycles(95))),
             "lat_max": int(round(self.latency_cycles(100))),
         }
+        if self.migrated_vertices:  # additive: pre-adaptive rows unchanged
+            row["migrated_vertices"] = self.migrated_vertices
+        return row
 
 
 @jax.jit
@@ -211,7 +215,7 @@ class Frontend:
 
     def __init__(self, pg: PartitionedGraph, app: str = "bfs",
                  cfg: EngineConfig = EngineConfig(), width: int = 8,
-                 policy: str = "static", mesh=None):
+                 policy: str = "static", mesh=None, graph=None):
         if app not in ("bfs", "sssp"):
             raise ValueError(f"servable point-query apps: bfs/sssp, "
                              f"got {app!r}")
@@ -222,12 +226,20 @@ class Frontend:
                              "(the host drives the admit loop)")
         if width < 1:
             raise ValueError("width must be >= 1")
+        if cfg.adapt and graph is None:
+            raise ValueError("cfg.adapt needs graph= (the host CSR) to "
+                             "re-deal edge segments between batches")
+        if cfg.adapt and policy != "static":
+            raise ValueError("between-batch adaptation is static-policy "
+                             "only (continuous lanes are never quiescent)")
         self.pg = pg
         self.app = app
         self.cfg = cfg
         self.width = width
         self.policy = policy
         self.mesh = mesh
+        self.graph = graph          # host CSR; needed when cfg.adapt
+        self.migrated_vertices = 0  # total moved by between-batch plans
         self.prog = as_program(CLASSIC[app])
         self.prog.validate(cfg, pg.T, pg.e_chunk, pg.v_chunk)
 
@@ -245,13 +257,46 @@ class Frontend:
                                                                  enq)))
         serve = (self._serve_static if self.policy == "static"
                  else self._serve_continuous)
+        migrated0 = self.migrated_vertices
         records, batches, cyc, en, rounds, seq, drops = serve(queue)
         records.sort(key=lambda r: r.qid)
         return ServeReport(
             app=self.app, policy=self.policy, width=self.width,
             arrival=arrival, records=records, batches=batches,
             total_cycles=cyc, total_energy_pj=en, total_rounds=rounds,
-            seq_rounds=seq, drops=drops, f_ghz=self.cfg.perf.f_ghz)
+            seq_rounds=seq, drops=drops, f_ghz=self.cfg.perf.f_ghz,
+            migrated_vertices=self.migrated_vertices - migrated0)
+
+    # -- between-batch adaptation (repro.place) ----------------------------
+
+    def _maybe_adapt(self, res):
+        """Relabel the resident partition from the finished batch's
+        telemetry (lane-led trace rings summed into one busy vector; the
+        planner's static in-degree fallback when tracing is off).  The
+        batch boundary is the serving quiescent point — every lane has
+        drained — so the migration is a pure relabeling and later queries
+        see bit-identical values.  Returns the priced ``(cycles, pJ)`` of
+        the move, charged to the serving clock by the caller."""
+        from repro.perf.model import migration_cost
+        from repro.place import (adapt_partition, cfg_tile_die,
+                                 migration_words, score_tiles)
+        busy = None
+        if res.trace is not None:
+            from repro.trace.export import lane_trace
+            busy = sum(score_tiles(lane_trace(res.trace, lane))
+                       for lane in range(self.width))
+        old = self.pg
+        pg2, plan = adapt_partition(self.graph, old, self.cfg, busy=busy)
+        if not plan.num_pairs:
+            return 0.0, 0.0
+        tile_die = cfg_tile_die(self.cfg, old.T)
+        wi, wc = migration_words(old, plan, tile_die)
+        cyc, pj = migration_cost(self.cfg.perf, wi, wc)
+        self.migrated_vertices += plan.moved_vertices(old)
+        self.pg = pg2
+        # e_chunk can change in the aligned edge modes: re-check sizing
+        self.prog.validate(self.cfg, pg2.T, pg2.e_chunk, pg2.v_chunk)
+        return cyc, pj
 
     # -- static batches ----------------------------------------------------
 
@@ -285,6 +330,11 @@ class Frontend:
             seq += res.seq_rounds
             drops += int(np.asarray(res.stats.drops).sum())
             batches += 1
+            if (self.cfg.adapt and queue
+                    and batches % max(self.cfg.adapt_every, 1) == 0):
+                mig_cyc, mig_pj = self._maybe_adapt(res)
+                now += mig_cyc
+                energy += mig_pj
         return records, batches, now, energy, rounds, seq, drops
 
     # -- continuous batching (lane recycling) ------------------------------

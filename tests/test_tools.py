@@ -1,0 +1,164 @@
+"""Direct unit tests for the repo's small host-side tooling.
+
+Backfill (PR10): ``tools/check_links.py`` and
+``benchmarks/common.py::stats_row`` were only exercised indirectly —
+through ``test_docs.py`` running the checker over the live docs, and
+through the smoke baseline staying byte-stable.  These tests pin the
+behaviors directly: the link checker's resolution rules on a synthetic
+repo tree, and ``stats_row``'s additive-key discipline — feature counters
+(launches, hbm_*, migration_*) appear only on rows whose run actually
+exercised the feature, so every pre-feature baseline row stays
+byte-stable forever.
+"""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.graph import CSRGraph, rmat_edges
+from repro.core.engine import EngineConfig
+from benchmarks.common import stats_row
+
+
+def _load_check_links():
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        "check_links", os.path.join(here, "tools", "check_links.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture()
+def cl(tmp_path, monkeypatch):
+    """The checker pointed at a synthetic repo tree under tmp_path."""
+    mod = _load_check_links()
+    monkeypatch.setattr(mod, "REPO", str(tmp_path))
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "mod.py").write_text("x = 1\n")
+    (tmp_path / "docs.md").write_text("see [mod](src/mod.py)\n")
+    return mod
+
+
+# --------------------------------------------------------------------------
+# tools/check_links.py
+# --------------------------------------------------------------------------
+
+def test_check_links_ok_and_dead(cl, tmp_path):
+    assert cl.check_file("docs.md") == []
+    (tmp_path / "bad.md").write_text("see [gone](src/gone.py)\n")
+    probs = cl.check_file("bad.md")
+    assert len(probs) == 1 and "src/gone.py" in probs[0]
+    assert "dead link" in probs[0]
+
+
+def test_check_links_code_tokens(cl, tmp_path):
+    (tmp_path / "t.md").write_text(
+        "`src/mod.py` is real, `src/nope.py` is not, and `just_code()` "
+        "is not a path token at all\n")
+    probs = cl.check_file("t.md")
+    assert len(probs) == 1 and "src/nope.py" in probs[0]
+    assert "dead path" in probs[0]
+
+
+def test_check_links_module_attr_suffix(cl, tmp_path):
+    # src/mod.some_fn resolves through the module file src/mod.py
+    (tmp_path / "t.md").write_text("`src/mod.some_fn` and "
+                                   "`src/gone.other_fn`\n")
+    probs = cl.check_file("t.md")
+    assert len(probs) == 1 and "src/gone.other_fn" in probs[0]
+
+
+def test_check_links_skips_urls_anchors_globs(cl, tmp_path):
+    (tmp_path / "t.md").write_text(
+        "[web](https://example.com/x) [mail](mailto:a@b.c) [anchor](#top) "
+        "`src/*.py` `src/what?.py`\n")
+    assert cl.check_file("t.md") == []
+
+
+def test_check_links_dedups_and_main_exit_codes(cl, tmp_path, capsys):
+    (tmp_path / "t.md").write_text("[a](src/gone.py) [b](src/gone.py)\n")
+    assert len(cl.check_file("t.md")) == 1  # each target reported once
+    assert cl.main(["t.md"]) == 1
+    assert cl.main(["docs.md"]) == 0
+    assert cl.main(["missing.md"]) == 1
+    out = capsys.readouterr().out
+    assert "missing.md: file not found" in out
+
+
+def test_check_links_directory_targets(cl, tmp_path):
+    (tmp_path / "t.md").write_text("[dir](src/) `src/`\n")
+    assert cl.check_file("t.md") == []
+
+
+# --------------------------------------------------------------------------
+# benchmarks/common.py::stats_row — additive-key discipline.
+# --------------------------------------------------------------------------
+
+# counters that must appear ONLY on rows whose run exercised the feature
+ADDITIVE_KEYS = ("launches", "hbm_windows", "hbm_edges",
+                 "migrated_vertices", "migration_cycles", "migration_pj")
+
+
+@pytest.fixture(scope="module")
+def run():
+    n, src, dst, val = rmat_edges(6, edge_factor=4, seed=1)
+    g = CSRGraph.from_edges(n, src, dst, val)
+    pg = alg.prepare(g, 4)
+    cfg = EngineConfig(f_pop=8, r_pop=8, u_pop=16, max_t2=8,
+                       cap_route_range=8, cap_route_update=32,
+                       cap_rangeq=128, cap_updq=4096, max_rounds=5000)
+    return alg.bfs(pg, int(np.argmax(g.ptr[1:] - g.ptr[:-1])), cfg), pg, cfg
+
+
+def test_stats_row_additive_keys_absent_on_plain_run(run):
+    res, _, _ = run
+    row = stats_row(res.stats)
+    # the invariant smoke.py used to gate: additive keys never leak onto
+    # rows whose run didn't exercise the feature (xla, vmem, no adapt)
+    for k in ADDITIVE_KEYS:
+        assert k not in row, f"{k} leaked onto a plain row"
+    # and the row is json-clean scalars (what the baselines store)
+    json.dumps(row)
+    assert row["rounds"] > 0 and "msgs_update" in row
+
+
+def test_stats_row_serving_keys_additive(run):
+    res, _, _ = run
+    plain = stats_row(res.stats)
+    served = stats_row(res.stats, queries=3, qps=12.34)
+    assert "queries" not in plain and "qps" not in plain
+    assert served["queries"] == 3 and served["qps"] == 12.3
+    assert {k: v for k, v in served.items()
+            if k not in ("queries", "qps")} == plain
+
+
+def test_stats_row_migration_keys_present_after_pricing(run):
+    from repro.place import MigrationPlan, price_migration
+    res, pg, cfg = run
+    real = np.flatnonzero(pg.inv >= 0)[:4]
+    plan = MigrationPlan(pairs=real.reshape(2, 2).astype(np.int64))
+    priced = price_migration(res.stats, pg, plan, pg.T, params=cfg.perf)
+    row = stats_row(priced)
+    assert row["migrated_vertices"] > 0
+    assert row["migration_cycles"] > 0 and row["migration_pj"] > 0
+    # pricing only adds the three migration keys (plus the cycle/energy
+    # totals it folds into); nothing else about the row changes
+    base = stats_row(res.stats)
+    changed = {k for k in row if k not in base
+               or row[k] != base[k]}
+    assert changed == {"migrated_vertices", "migration_cycles",
+                       "migration_pj", "cycles", "energy_pj"}
+
+
+def test_stats_row_vector_fields_expand(run):
+    res, _, _ = run
+    row = stats_row(res.stats)
+    # per-channel vectors expand to msgs_<i>/spills_<i> plus legacy views
+    assert row["msgs_0"] == row["msgs_range"]
+    assert row["msgs_1"] == row["msgs_update"]
+    assert row["flits_per_link_sum"] == int(
+        np.asarray(res.stats.flits_per_link).sum())

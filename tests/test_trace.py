@@ -187,6 +187,91 @@ def test_reconcile_detects_wrap(graph, pg):
 
 
 # --------------------------------------------------------------------------
+# Ring edge cases the migration planner leans on (PR10, repro.place).
+# --------------------------------------------------------------------------
+
+def test_trace_every_exceeds_trace_rounds(graph, pg):
+    """Cadence sparser than the ring (trace_every > trace_rounds) is
+    legal: slots fill with every-th rounds only, and the planner's
+    signal (:func:`repro.place.score_tiles`) still reads well-formed."""
+    from repro.place import score_tiles
+    from repro.trace import trace_arrays
+    cfg = small_cfg(trace=True, trace_rounds=4, trace_every=8)
+    r = alg.bfs(pg, _root(graph), cfg)
+    n_rounds = int(r.stats.rounds)
+    tr = trace_arrays(r.trace)
+    want = np.arange(0, n_rounds, 8)
+    assert tr["n_seen"] == tr["n_recorded"] == len(want) <= 4
+    np.testing.assert_array_equal(tr["round_id"], want)
+    busy = score_tiles(r.trace)
+    assert busy.shape == (pg.T,) and busy.sum() > 0
+
+
+def test_ring_wrap_keeps_last_recorded_not_last_rounds(graph, pg):
+    """With a cadence, the ring holds the last R *recorded* (multiple-of-
+    every) rounds — not the last R engine rounds."""
+    from repro.trace import trace_arrays
+    cfg = small_cfg(trace=True, trace_rounds=4, trace_every=2)
+    r = alg.bfs(pg, _root(graph), cfg)
+    n_rounds = int(r.stats.rounds)
+    recorded = np.arange(0, n_rounds, 2)
+    assert len(recorded) > 4, "graph must overflow the tiny ring"
+    tr = trace_arrays(r.trace)
+    assert tr["n_seen"] == len(recorded) and tr["n_recorded"] == 4
+    np.testing.assert_array_equal(tr["round_id"], recorded[-4:])
+
+
+def test_ring_wrap_exactly_at_boundary(graph, pg):
+    """R == rounds is an exact fit — full, NOT wrapped, and the whole
+    timeline certifies; R == rounds - 1 wraps by one slot and the
+    certification is refused, but the last slot still anchors the
+    timeline end bitwise (what the epoch-boundary planner reads)."""
+    from repro.trace import reconcile_cycles, trace_arrays
+    probe = alg.bfs(pg, _root(graph), small_cfg(trace=True,
+                                                trace_rounds=1024))
+    n_rounds = int(probe.stats.rounds)
+    assert 2 < n_rounds < 1024
+    fit = alg.bfs(pg, _root(graph), small_cfg(trace=True,
+                                              trace_rounds=n_rounds))
+    tr = trace_arrays(fit.trace)
+    assert tr["n_seen"] == tr["n_recorded"] == n_rounds
+    np.testing.assert_array_equal(tr["round_id"], np.arange(n_rounds))
+    cycles = float(np.asarray(fit.stats.cycles))
+    assert reconcile_cycles(fit.trace, cycles)["exact"]
+
+    short = alg.bfs(pg, _root(graph), small_cfg(trace=True,
+                                                trace_rounds=n_rounds - 1))
+    tr1 = trace_arrays(short.trace)
+    assert tr1["n_seen"] == n_rounds and tr1["n_recorded"] == n_rounds - 1
+    np.testing.assert_array_equal(tr1["round_id"], np.arange(1, n_rounds))
+    rec = reconcile_cycles(short.trace, cycles)
+    assert not rec["exact"]  # round 0 fell off the ring
+    assert rec["last_total"] == cycles  # ...but the end anchor survives
+
+
+def test_reconcile_cycles_mid_epoch_wrap(graph, pg):
+    """pagerank restarts the engine per epoch and returns the LAST
+    epoch's ring; when that ring wrapped mid-epoch, certification is
+    refused, yet the last slot's running total still equals the epoch's
+    own cycle cost bitwise — per-epoch cost is structural (every edge
+    pushes every epoch), so it matches the single-epoch run and the
+    accumulated two-epoch total is exactly twice it."""
+    from repro.trace import reconcile_cycles, trace_arrays
+    one = alg.pagerank(pg, iters=1, cfg=small_cfg(trace=True,
+                                                  trace_rounds=4096))
+    two = alg.pagerank(pg, iters=2, cfg=small_cfg(trace=True,
+                                                  trace_rounds=4))
+    tr = trace_arrays(two.trace)
+    assert tr["n_seen"] > tr["n_recorded"]  # wrapped inside the epoch
+    total = float(np.asarray(two.stats.cycles))
+    rec = reconcile_cycles(two.trace, total)
+    assert not rec["exact"]
+    per_epoch = float(np.asarray(one.stats.cycles))
+    assert rec["last_total"] == per_epoch
+    assert total == 2 * per_epoch
+
+
+# --------------------------------------------------------------------------
 # Exporters: Perfetto JSON, JSONL, summary.
 # --------------------------------------------------------------------------
 
